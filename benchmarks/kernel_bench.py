@@ -1,0 +1,118 @@
+"""Per-kernel micro-benchmarks: interpret-mode correctness-path timing on CPU
+plus analytic TPU-roofline derived throughput (the real number a TPU would
+see, from the kernel's HBM traffic model)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.roofline import HBM_BW, PEAK_FLOPS
+
+
+def _time(fn, *args, iters=3):
+    fn(*args)  # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def bench_flash_attention():
+    from repro.kernels.flash_attention.ref import attention_ref
+    b, h, kv, s, d = 1, 8, 2, 1024, 64
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (b, h, s, d), jnp.bfloat16)
+    k = jax.random.normal(key, (b, kv, s, d), jnp.bfloat16)
+    v = jax.random.normal(key, (b, kv, s, d), jnp.bfloat16)
+    us = _time(jax.jit(lambda a, b_, c: attention_ref(a, b_, c)), q, k, v)
+    flops = 4 * b * h * s * s * d * 0.5  # causal
+    tpu_us = flops / PEAK_FLOPS * 1e6
+    return us, f"tpu_roofline_us={tpu_us:.1f} flops={flops:.2e}"
+
+
+def bench_decode_attention():
+    from repro.kernels.decode_attention.ref import decode_attention_ref
+    b, h, kv, s, d = 8, 32, 8, 32768, 128
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (b, h, d), jnp.bfloat16)
+    kc = jax.random.normal(key, (b, kv, s, d), jnp.bfloat16)
+    vc = jax.random.normal(key, (b, kv, s, d), jnp.bfloat16)
+    ln = jnp.full((b,), s, jnp.int32)
+    us = _time(jax.jit(decode_attention_ref), q, kc, vc, ln)
+    bytes_ = kc.size * 2 * 2  # stream k+v once
+    tpu_us = bytes_ / HBM_BW * 1e6
+    return us, f"tpu_roofline_us={tpu_us:.1f} cache_bytes={bytes_:.2e}"
+
+
+def bench_mamba_scan():
+    from repro.kernels.mamba_scan.kernel import selective_scan
+    b, s, di, n = 2, 512, 256, 16
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (b, s, di))
+    dt = jax.nn.softplus(jax.random.normal(key, (b, s, di)) * 0.5)
+    B = jax.random.normal(key, (b, s, n))
+    C = jax.random.normal(key, (b, s, n))
+    A = -jnp.exp(jax.random.normal(key, (di, n)) * 0.2)
+    D = jnp.ones((di,))
+    fn = jax.jit(lambda *a: selective_scan(*a, block_t=128, block_d=128, interpret=True))
+    us = _time(fn, x, dt, B, C, A, D, iters=1)
+    bytes_ = (x.size * 2 + B.size * 2) * 4 + x.size * 4
+    tpu_us = bytes_ / HBM_BW * 1e6
+    return us, f"tpu_roofline_us={tpu_us:.1f} (interpret-mode timing)"
+
+
+def bench_rglru():
+    from repro.kernels.rglru.kernel import rglru_scan
+    b, s, w = 2, 512, 256
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (b, s, w))
+    r = jax.nn.sigmoid(jax.random.normal(key, (b, s, w)))
+    i = jax.nn.sigmoid(jax.random.normal(key, (b, s, w)))
+    la = -jax.nn.softplus(jax.random.normal(key, (w,)))
+    fn = jax.jit(lambda *a: rglru_scan(*a, block_t=128, block_w=128, interpret=True))
+    us = _time(fn, x, r, i, la, iters=1)
+    bytes_ = x.size * 3 * 4 + x.size * 4
+    tpu_us = bytes_ / HBM_BW * 1e6
+    return us, f"tpu_roofline_us={tpu_us:.1f} (interpret-mode timing)"
+
+
+def bench_temporal_gate():
+    from repro.kernels.temporal_gate.ref import gate_cell_ref
+    from repro.core.gating import GateConfig, gate_specs
+    from repro.models.params import init_params
+    b, d, m = 4096, 35, 32
+    gcfg = GateConfig(d_feature=d, d_hidden=m)
+    p = init_params(gate_specs(gcfg), jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(1)
+    dx = jax.random.normal(key, (b, d))
+    h = jax.random.normal(key, (b, m)) * 0.1
+    vol = jax.random.uniform(key, (b,))
+    us = _time(jax.jit(gate_cell_ref), dx, h, vol, p)
+    flops = 2 * b * (3 * d * m + 3 * m * m + m)
+    tpu_us = max(flops / PEAK_FLOPS, (dx.size + h.size) * 4 * 3 / HBM_BW) * 1e6
+    return us, f"tpu_roofline_us={tpu_us:.2f} streams={b}"
+
+
+def bench_robust_solver():
+    import numpy as np
+    from repro.core.cost_model import SystemConfig
+    from repro.core.robust import RobustProblem, solve_ccg
+    sys_ = SystemConfig()
+    prob = RobustProblem.build(sys_)
+    z = jnp.asarray(np.random.default_rng(0).uniform(0, 1, 512), jnp.float32)
+    aq = jnp.asarray(np.random.default_rng(1).uniform(0.5, 0.8, 512), jnp.float32)
+    fn = jax.jit(lambda z_, a_: solve_ccg(prob, z_, a_)["o_up"])
+    us = _time(fn, z, aq)
+    return us, f"tasks=512 ({us/512:.1f}us/task CCG)"
+
+
+ALL = {
+    "kernel/flash_attention": bench_flash_attention,
+    "kernel/decode_attention": bench_decode_attention,
+    "kernel/mamba_scan": bench_mamba_scan,
+    "kernel/rglru": bench_rglru,
+    "kernel/temporal_gate": bench_temporal_gate,
+    "core/robust_ccg": bench_robust_solver,
+}

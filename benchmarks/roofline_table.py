@@ -1,0 +1,34 @@
+"""Print the roofline table from collected dry-run artifacts."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load_cells(out_dir="results/dryrun", mesh="single"):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(out_dir, f"*__{mesh}.json"))):
+        r = json.load(open(f))
+        if r.get("status") != "ok":
+            rows.append((r.get("arch"), r.get("shape"), "FAILED", 0, 0, 0, 0))
+            continue
+        t = r["terms"]
+        rows.append((
+            r["arch"], r["shape"], t["dominant"],
+            t["compute_s"], t["memory_s"], t["collective_s"],
+            r["useful_flops_ratio"],
+        ))
+    return rows
+
+
+def print_table(out_dir="results/dryrun"):
+    rows = load_cells(out_dir)
+    if not rows:
+        print("# no dry-run artifacts found; run: PYTHONPATH=src python -m repro.launch.dryrun")
+        return rows
+    print(f"# {'arch':22s} {'shape':12s} {'dominant':10s} {'compute_ms':>10s} "
+          f"{'memory_ms':>10s} {'coll_ms':>10s} {'useful':>7s}")
+    for a, s, d, c, m, co, u in rows:
+        print(f"# {a:22s} {s:12s} {d:10s} {c*1e3:10.1f} {m*1e3:10.1f} {co*1e3:10.1f} {u:7.2f}")
+    return rows

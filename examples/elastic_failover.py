@@ -1,0 +1,43 @@
+"""Fault tolerance demo: node failure mid-training -> checkpoint restore on a
+re-built (elastic) mesh -> training continues.
+
+  PYTHONPATH=src python examples/elastic_failover.py
+"""
+import shutil
+
+from repro.configs import get_smoke_config
+from repro.data.tokens import TokenPipeline
+from repro.runtime.cluster import ClusterSim, FailureInjector, elastic_remesh
+from repro.train.optimizer import AdamWConfig
+from repro.train.trainer import NodeFailure, TrainConfig, Trainer
+
+CKPT = "results/ckpt_failover"
+shutil.rmtree(CKPT, ignore_errors=True)
+
+cfg = get_smoke_config("minitron-8b")
+tcfg = TrainConfig(steps=60, ckpt_every=20, ckpt_dir=CKPT, log_every=20,
+                   opt=AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=60))
+data = iter(TokenPipeline(cfg.vocab_size, 64, 4, seed=0))
+
+cluster = ClusterSim(n_nodes=4)
+injector = FailureInjector(schedule={35: "node 2 heartbeat timeout"})
+
+print("phase 1: training with failure scheduled at step 35")
+tr = Trainer(cfg, tcfg, failure_injector=injector)
+try:
+    tr.run(data)
+except NodeFailure as e:
+    print(f"  !! {e}")
+    cluster.kill(2)
+
+print(f"phase 2: elastic re-mesh with {cluster.alive}/{cluster.n_nodes} nodes")
+mesh = elastic_remesh(cluster.alive)
+print(f"  new mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))}")
+
+print("phase 3: restore latest checkpoint and resume")
+tr2 = Trainer(cfg, tcfg)  # fresh process semantics
+resume_step = tr2.ckpt.latest_step()
+state, hist = tr2.run(data)
+for h in hist:
+    print(f"  step {h['step']:4d} loss {h['loss']:.4f}")
+print(f"recovered: resumed from step {resume_step} -> finished at {tr2.step}")

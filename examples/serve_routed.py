@@ -1,0 +1,11 @@
+"""Routed serving: R2E-VID gate + robust router dispatching batched requests
+onto live edge/cloud model pools.
+
+  PYTHONPATH=src python examples/serve_routed.py
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    import sys
+    sys.argv = [sys.argv[0], "--rounds", "3", "--streams", "8"]
+    main()

@@ -1,0 +1,33 @@
+"""Architecture registry: dashed public ids -> config modules."""
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig
+
+_MODULES = {
+    "recurrentgemma-9b": "repro.configs.recurrentgemma_9b",
+    "falcon-mamba-7b": "repro.configs.falcon_mamba_7b",
+    "musicgen-medium": "repro.configs.musicgen_medium",
+    "yi-34b": "repro.configs.yi_34b",
+    "qwen3-8b": "repro.configs.qwen3_8b",
+    "minitron-8b": "repro.configs.minitron_8b",
+    "qwen1.5-0.5b": "repro.configs.qwen15_05b",
+    "moonshot-v1-16b-a3b": "repro.configs.moonshot_v1_16b_a3b",
+    "mixtral-8x22b": "repro.configs.mixtral_8x22b",
+    "qwen2-vl-2b": "repro.configs.qwen2_vl_2b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[arch]).CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[arch]).SMOKE

@@ -1,0 +1,124 @@
+"""Delay / energy / accuracy model (paper §3.1, §4.1.2).
+
+Knobs (exactly the paper's): resolutions {360,540,720,900,1080}p, frame rates
+10–50 FPS, K=5 model versions per tier, cloud model ~10x the edge model,
+bandwidths 100/50 Mbps, powers 100/15 W, cost = D + β·E with β = 0.06.
+
+Two hardware profiles:
+  "paper"  : Jetson-NX edge + Xeon cloud throughputs (reproduction)
+  "tpu_v5e": edge/cloud = small/large TPU v5e pools; per-version throughput is
+             derived from the dry-run roofline terms of the variant ladder
+             (hardware adaptation, DESIGN.md §2)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SystemConfig:
+    resolutions: tuple = (360, 540, 720, 900, 1080)      # p
+    fps_options: tuple = (10, 20, 30, 40, 50)
+    num_versions: int = 5
+    beta: float = 0.06
+    segment_sec: float = 1.0
+    bits_per_pixel: float = 0.12          # H.264-ish compressed
+    edge_bw_mbps: float = 50.0
+    cloud_bw_mbps: float = 100.0
+    edge_power_w: float = 15.0
+    cloud_power_w: float = 100.0
+    transmit_power_w: float = 2.5
+    # per-tier sustained throughput in GFLOP/s (paper profile)
+    edge_gflops: float = 800.0            # Jetson Xavier NX effective
+    cloud_gflops: float = 6000.0          # Xeon 4214R effective
+    # version ladder: FLOPs per frame at 1080p, edge tier (GFLOP)
+    v1_gflops_per_frame: float = 1.2      # YOLOv5n-ish
+    version_scale: float = 1.9            # v_{k+1} = scale * v_k
+    cloud_model_factor: float = 10.0      # cloud models ~10x edge (paper §4.1.1)
+    total_bw_mbps: float = 600.0          # C6 budget across tasks
+    gamma: int = 2                        # Γ uncertainty budget
+    u_dev: float = 0.35                   # max relative deviation ũ_k
+    acc_margin_nominal: float = 0.005     # baselines' feasibility slack
+    acc_margin_robust: float = 0.02       # ours: robustly protected C1
+
+    @property
+    def n_res(self):
+        return len(self.resolutions)
+
+    @property
+    def n_fps(self):
+        return len(self.fps_options)
+
+
+def _pixels(res_p):
+    return (res_p * 16 // 9) * res_p
+
+
+def version_flops(sys: SystemConfig, tier: int, k: int, res_p: int) -> float:
+    """GFLOP per frame for version k (0-based) on tier (0=edge, 1=cloud)."""
+    base = sys.v1_gflops_per_frame * (sys.version_scale ** k)
+    if tier == 1:
+        base *= sys.cloud_model_factor
+    return base * _pixels(res_p) / _pixels(1080)
+
+
+# ---------------------------------------------------------------------------
+# Vectorized tables over the full decision lattice
+# ---------------------------------------------------------------------------
+def accuracy_table(sys: SystemConfig, difficulty):
+    """f(r, p, v, y | z): (..., N, Z, K, 2) accuracy for difficulty z (...,).
+
+    Monotone saturating in resolution and version (paper Fig. 2 shape);
+    difficulty z in [0,1] (content motion) penalizes low fps / low res.
+    """
+    z = jnp.asarray(difficulty)[..., None, None, None, None]
+    r = jnp.asarray(sys.resolutions, jnp.float32) / 1080.0
+    p = jnp.asarray(sys.fps_options, jnp.float32) / 50.0
+    k = jnp.arange(sys.num_versions, dtype=jnp.float32)
+    r = r[:, None, None, None]
+    p = p[None, :, None, None]
+    k = k[None, None, :, None]
+    tier = jnp.arange(2, dtype=jnp.float32)[None, None, None, :]
+
+    a_max = 0.60 + 0.045 * k + 0.04 * tier           # bigger model, higher ceiling
+    sat = 1.0 - jnp.exp(-(2.5 + 0.3 * k) * r)
+    f = a_max * sat
+    f = f - 0.10 * z * (1.0 - p) - 0.06 * z * (1.0 - r)
+    return jnp.clip(f, 0.0, 1.0)
+
+
+def cost_tables(sys: SystemConfig):
+    """Returns (c1, b2, bw_mb):
+
+      c1   : (N, Z, 2) first-stage cost  — transmission delay + β·tx energy
+      b2   : (N, Z, K, 2) second-stage   — compute delay + β·compute energy
+      bw_mb: (N, Z, 2) bandwidth consumed (Mbps) per config
+    """
+    res = np.array(sys.resolutions, np.float32)
+    fps = np.array(sys.fps_options, np.float32)
+    pix = np.array([_pixels(int(r)) for r in sys.resolutions], np.float32)
+
+    data_mbit = (pix[:, None] * fps[None, :] * sys.segment_sec * sys.bits_per_pixel) / 1e6
+    bw = np.array([sys.edge_bw_mbps, sys.cloud_bw_mbps], np.float32)
+    trans_delay = data_mbit[..., None] / bw  # (N, Z, 2) seconds
+    trans_energy = sys.transmit_power_w * trans_delay
+    c1 = trans_delay + sys.beta * trans_energy
+
+    gf = np.zeros((sys.n_res, sys.num_versions, 2), np.float32)
+    for i, r in enumerate(sys.resolutions):
+        for k in range(sys.num_versions):
+            for t in range(2):
+                gf[i, k, t] = version_flops(sys, t, k, int(r))
+    thr = np.array([sys.edge_gflops, sys.cloud_gflops], np.float32)
+    power = np.array([sys.edge_power_w, sys.cloud_power_w], np.float32)
+    # frames processed per segment = fps * seg_sec
+    comp_delay = (
+        gf[:, None, :, :] * fps[None, :, None, None] * sys.segment_sec / thr
+    )  # (N, Z, K, 2)
+    comp_energy = power * comp_delay
+    b2 = comp_delay + sys.beta * comp_energy
+
+    return jnp.asarray(c1), jnp.asarray(b2), jnp.asarray(data_mbit[..., None] * np.ones(2))

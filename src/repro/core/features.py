@@ -1,0 +1,76 @@
+"""Motion features Δx_t = φ(I_t, I_{t-1})  (paper §3.2).
+
+φ combines pixel-wise absolute difference and histogram-based motion
+magnitude, with 4x spatial downsampling and a temporal moving average of
+window 3.  Output: Δx_t ∈ R^d per frame.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+DOWNSAMPLE = 4
+MA_WINDOW = 3
+HIST_BINS = 16
+GRID = 4  # spatial pooling grid for the diff map
+
+
+def feature_dim() -> int:
+    return GRID * GRID + HIST_BINS + 3  # grid means + histogram + (mean, std, max)
+
+
+def _downsample(x, factor: int):
+    h, w = x.shape[-2], x.shape[-1]
+    h2, w2 = h // factor, w // factor
+    x = x[..., : h2 * factor, : w2 * factor]
+    x = x.reshape(*x.shape[:-2], h2, factor, w2, factor)
+    return x.mean(axis=(-3, -1))
+
+
+def _soft_histogram(x, bins: int):
+    """Differentiable histogram of values in [0, 1]."""
+    centers = (jnp.arange(bins) + 0.5) / bins
+    width = 1.0 / bins
+    w = jax.nn.relu(1.0 - jnp.abs(x[..., None] - centers) / width)  # triangular
+    return w.reshape(-1, bins).mean(axis=0)
+
+
+def _grid_pool(x, grid: int):
+    h, w = x.shape[-2], x.shape[-1]
+    gh, gw = max(h // grid, 1), max(w // grid, 1)
+    x = x[..., : gh * grid, : gw * grid]
+    x = x.reshape(grid, gh, grid, gw)
+    return x.mean(axis=(1, 3)).reshape(-1)
+
+
+def frame_diff_features(prev_frame, frame):
+    """Single-frame φ before temporal smoothing. frames: (H, W) in [0,1]."""
+    diff = jnp.abs(frame - prev_frame)
+    diff = _downsample(diff, DOWNSAMPLE)
+    grid = _grid_pool(diff, GRID)
+    hist = _soft_histogram(jnp.clip(diff, 0.0, 1.0), HIST_BINS)
+    stats = jnp.stack([diff.mean(), diff.std(), diff.max()])
+    return jnp.concatenate([grid, hist, stats])
+
+
+def motion_features(frames):
+    """frames: (T, H, W) grayscale in [0,1] -> Δx: (T-1, d) with MA-3."""
+    feats = jax.vmap(frame_diff_features)(frames[:-1], frames[1:])
+    return _moving_average(feats)  # causal temporal moving average, window 3
+
+
+def _moving_average(feats):
+    pad = jnp.concatenate([jnp.repeat(feats[:1], MA_WINDOW - 1, axis=0), feats], axis=0)
+    stacked = jnp.stack([pad[i : i + feats.shape[0]] for i in range(MA_WINDOW)], axis=0)
+    return stacked.mean(axis=0)
+
+
+def segment_features(frames, segment_len: int):
+    """Split a stream into segments of K frames and mean-pool φ per segment.
+
+    frames: (T, H, W) -> (T // segment_len, d)
+    """
+    dx = motion_features(frames)  # (T-1, d)
+    n = dx.shape[0] // segment_len
+    dx = dx[: n * segment_len].reshape(n, segment_len, -1)
+    return dx.mean(axis=1)

@@ -1,0 +1,126 @@
+"""Temporal gating unit (paper §3.2, Eq. 5-6).
+
+Gated recurrent cell with *content-adaptive forget bias*:
+
+    g_t = σ( W_g Δx_t + U_g h_{t-1} + b_g + α · Var(Δx_{t-T:t}) )      (5)
+    r_t = σ( W_r Δx_t + U_r h_{t-1} + b_r )
+    h_t = (1-g_t) ⊙ h_{t-1} + g_t ⊙ tanh( W_h Δx_t + U_h (r_t ⊙ h_{t-1}) + b_h )  (6)
+    τ_t = σ( W_o h_t + b_o ) ∈ [0,1]      — temporal significance score
+
+The volatility term α·Var(Δx_{t-T:t}) opens the gate aggressively when
+recent motion variance spikes (missed-critical-event protection).  Also
+provided as a fused Pallas TPU kernel in repro.kernels.temporal_gate.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class GateConfig:
+    d_feature: int
+    d_hidden: int = 32
+    var_window: int = 8          # T in Eq. (5)
+    alpha_init: float = 1.0
+
+
+def gate_specs(cfg: GateConfig) -> dict:
+    d, m = cfg.d_feature, cfg.d_hidden
+    sd, sm = d ** -0.5, m ** -0.5
+    return {
+        "w_g": ParamSpec((d, m), (None, None), stddev=sd),
+        "u_g": ParamSpec((m, m), (None, None), stddev=sm),
+        "b_g": ParamSpec((m,), (None,), init="zeros"),
+        "alpha": ParamSpec((), (), init="ones"),
+        "w_r": ParamSpec((d, m), (None, None), stddev=sd),
+        "u_r": ParamSpec((m, m), (None, None), stddev=sm),
+        "b_r": ParamSpec((m,), (None,), init="zeros"),
+        "w_h": ParamSpec((d, m), (None, None), stddev=sd),
+        "u_h": ParamSpec((m, m), (None, None), stddev=sm),
+        "b_h": ParamSpec((m,), (None,), init="zeros"),
+        "w_o": ParamSpec((m, 1), (None, None), stddev=sm),
+        "b_o": ParamSpec((1,), (None,), init="zeros"),
+    }
+
+
+class GateState(NamedTuple):
+    h: jnp.ndarray          # (m,) hidden
+    var_buf: jnp.ndarray    # (T, d) recent Δx ring buffer
+    var_idx: jnp.ndarray    # scalar int32
+
+
+def init_state(cfg: GateConfig) -> GateState:
+    return GateState(
+        h=jnp.zeros((cfg.d_hidden,), jnp.float32),
+        var_buf=jnp.zeros((cfg.var_window, cfg.d_feature), jnp.float32),
+        var_idx=jnp.zeros((), jnp.int32),
+    )
+
+
+def gate_step(cfg: GateConfig, p, state: GateState, dx):
+    """One recurrence step. dx: (d,). Returns (new_state, (tau, g_mean))."""
+    buf = jax.lax.dynamic_update_slice_in_dim(
+        state.var_buf, dx[None], jnp.mod(state.var_idx, cfg.var_window), axis=0
+    )
+    # volatility over the last T frames (scalar: mean feature variance)
+    vol = jnp.var(buf, axis=0).mean()
+
+    g = jax.nn.sigmoid(dx @ p["w_g"] + state.h @ p["u_g"] + p["b_g"] + p["alpha"] * vol)
+    r = jax.nn.sigmoid(dx @ p["w_r"] + state.h @ p["u_r"] + p["b_r"])
+    cand = jnp.tanh(dx @ p["w_h"] + (r * state.h) @ p["u_h"] + p["b_h"])
+    h = (1.0 - g) * state.h + g * cand
+    tau = jax.nn.sigmoid(h @ p["w_o"] + p["b_o"])[0]
+    new_state = GateState(h=h, var_buf=buf, var_idx=state.var_idx + 1)
+    return new_state, (tau, g.mean())
+
+
+def gate_scan(cfg: GateConfig, p, dxs, state: GateState | None = None):
+    """dxs: (T, d) -> (taus (T,), gate_means (T,), final_state)."""
+    if state is None:
+        state = init_state(cfg)
+
+    def body(s, dx):
+        s, out = gate_step(cfg, p, s, dx)
+        return s, out
+
+    final, (taus, gs) = jax.lax.scan(body, state, dxs)
+    return taus, gs, final
+
+
+def gate_scan_batch(cfg: GateConfig, p, dxs, states=None):
+    """dxs: (B, T, d) — vmapped over streams."""
+    if states is None:
+        states = jax.vmap(lambda _: init_state(cfg))(jnp.arange(dxs.shape[0]))
+    return jax.vmap(lambda d, s: gate_scan(cfg, p, d, s))(dxs, states)
+
+
+# ---------------------------------------------------------------------------
+# Meta-training (offline warm-up): L = L_acc + λ1·L_lat + λ2·L_comp
+#   L_acc : BCE of τ against the oracle cloud-benefit label
+#   L_lat : mean τ      (cloud offloads cost latency)
+#   L_comp: mean gate   (gate openness costs compute)
+# Online fine-tuning adds a proximal term μ/2 ||θ - θ_offline||² against
+# catastrophic forgetting (paper §3.2).
+# ---------------------------------------------------------------------------
+def gate_loss(cfg: GateConfig, p, dxs, benefit_labels, lam1=0.05, lam2=0.01,
+              anchor=None, mu=0.0):
+    taus, gs, _ = gate_scan_batch(cfg, p, dxs)
+    eps = 1e-6
+    bce = -(benefit_labels * jnp.log(taus + eps)
+            + (1 - benefit_labels) * jnp.log(1 - taus + eps)).mean()
+    l_lat = taus.mean()
+    l_comp = gs.mean()
+    loss = bce + lam1 * l_lat + lam2 * l_comp
+    if anchor is not None and mu > 0:
+        prox = sum(
+            jnp.sum(jnp.square(a - b))
+            for a, b in zip(jax.tree_util.tree_leaves(p), jax.tree_util.tree_leaves(anchor))
+        )
+        loss = loss + 0.5 * mu * prox
+    return loss, {"bce": bce, "l_lat": l_lat, "l_comp": l_comp}

@@ -1,0 +1,191 @@
+"""Two-stage robust optimization (paper §3.1/§3.3, Eq. 2-10, Alg. 2).
+
+Decision lattice per task: first stage y=(route∈{edge,cloud}, r∈R, p∈P)
+(50 options), second stage v∈V (K=5 model versions).  The Γ-budget
+polyhedral uncertainty set (Eq. 9)
+
+    U = { u : u_k = g_k·ũ_k,  g_k∈[0,1],  Σ_k g_k ≤ Γ }
+
+scales the second-stage cost of model k by (1+u_k) (compute-time deviation
+under load/network fluctuation).  By Bertsimas-style strong duality the
+worst-case u sits at a pole of U (Eq. 10), so SP is solved *exactly* by pole
+enumeration (K=5 ⇒ 2^K = 32 subset poles, filtered to |S| ≤ Γ), and the
+column-and-constraint master (Alg. 2) alternates:
+
+    MP1 : y* = argmin_y c1(y) + η(y),  η(y) = max over generated scenarios
+          of the recourse value  min_v b2(v; y)·(1+u_j,v)
+    SP  : u_{j+1} = argmax_{u∈poles} min_{v feasible} b2(v; y*)·(1+u_v)
+
+until O_up − O_down ≤ θ.  Everything is vectorized over tasks with vmap;
+``exact_oracle`` brute-forces min_y max_u min_v for tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cost_model import SystemConfig, accuracy_table, cost_tables
+
+BIG = 1e9
+
+
+def _poles(num_versions: int, gamma: int):
+    """All subset poles of U with |S| <= gamma: (P, K) in {0,1}."""
+    k = num_versions
+    masks = []
+    for bits in range(2 ** k):
+        s = [(bits >> i) & 1 for i in range(k)]
+        if sum(s) <= gamma:
+            masks.append(s)
+    return jnp.asarray(masks, jnp.float32)  # (P, K)
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("c1", "b2", "poles", "u_dev"),
+    meta_fields=("sys",),
+)
+@dataclasses.dataclass(frozen=True)
+class RobustProblem:
+    sys: SystemConfig
+    c1: jnp.ndarray        # (N, Z, 2) first-stage cost
+    b2: jnp.ndarray        # (N, Z, K, 2) second-stage nominal cost
+    poles: jnp.ndarray     # (P, K) pole indicators
+    u_dev: jnp.ndarray     # (K,) max deviations ũ_k
+
+    @classmethod
+    def build(cls, sys: SystemConfig):
+        c1, b2, _ = cost_tables(sys)
+        poles = _poles(sys.num_versions, sys.gamma)
+        # deviation grows with model size (bigger models queue worse)
+        u_dev = sys.u_dev * (0.6 + 0.4 * jnp.arange(sys.num_versions) / (sys.num_versions - 1))
+        return cls(sys=sys, c1=c1, b2=b2, poles=poles, u_dev=u_dev)
+
+
+def recourse_value(prob: RobustProblem, feas, b2_yrp, pole):
+    """min_v (1+u_v)·b2_v over feasible v for one pole. b2_yrp: (K,)."""
+    u = pole * prob.u_dev
+    vals = jnp.where(feas, b2_yrp * (1.0 + u), BIG)
+    return vals.min(), vals.argmin()
+
+
+@partial(jax.jit, static_argnames=("max_iters",))
+def solve_ccg(prob: RobustProblem, difficulty, acc_req, max_iters: int = 8, theta: float = 1e-4):
+    """Alg. 2 for a batch of tasks.
+
+    difficulty: (M,) content difficulty z; acc_req: (M,) A^q_i.
+    Returns dict with y (route), r, p, v indices + objective bounds.
+    """
+    sys = prob.sys
+    f = accuracy_table(sys, difficulty)              # (M, N, Z, K, 2)
+    # C1 protected with the robust accuracy margin (h in the Benders cuts)
+    feas = f >= (acc_req + sys.acc_margin_robust)[:, None, None, None, None]
+    # cost arranged per first-stage option (N*Z*2) x versions
+    c1 = prob.c1.transpose(2, 0, 1).reshape(-1)       # (F,) F = 2*N*Z
+    b2 = prob.b2.transpose(3, 0, 1, 2).reshape(-1, sys.num_versions)  # (F, K)
+    feas_f = feas.transpose(0, 4, 1, 2, 3).reshape(feas.shape[0], -1, sys.num_versions)
+
+    def per_task(feas_i):
+        # any first-stage option with no feasible v is excluded from MP1
+        fs_ok = feas_i.any(axis=-1)                      # (F,)
+
+        def pole_recourse(u_mask, y_all=True):
+            u = u_mask * prob.u_dev                      # (K,)
+            vals = jnp.where(feas_i, b2 * (1.0 + u), BIG)  # (F, K)
+            return vals.min(axis=-1)                     # (F,)
+
+        # worst-case over ALL poles for every F (used for oracle + SP)
+        rec_all = jax.vmap(pole_recourse)(prob.poles)    # (P, F)
+
+        def body(carry):
+            it, scen_mask, o_up, _, _, done = carry
+            # MP1: eta(y) = max over generated scenarios of the recourse value
+            active = jnp.where(scen_mask[:, None] > 0, rec_all, -BIG)
+            eta = jnp.where(scen_mask.sum() > 0, active.max(axis=0), 0.0)  # (F,)
+            obj = jnp.where(fs_ok, c1 + eta, BIG)
+            y_star = obj.argmin()
+            o_down = obj[y_star]
+            # SP: exact worst-case pole for y_star (Eq. 10 pole optimality)
+            sp_vals = rec_all[:, y_star]                 # (P,)
+            worst_pole = sp_vals.argmax()
+            q = sp_vals[worst_pole]
+            o_up = jnp.minimum(o_up, c1[y_star] + q)
+            done = (o_up - o_down) <= theta
+            scen_mask = scen_mask.at[worst_pole].set(1.0)  # add scenario column
+            return it + 1, scen_mask, o_up, o_down, y_star, done
+
+        def cond(carry):
+            it, _, _, _, _, done = carry
+            return (it < max_iters) & ~done
+
+        p = prob.poles.shape[0]
+        init = (0, jnp.zeros((p,)), jnp.asarray(BIG), jnp.asarray(-BIG),
+                jnp.asarray(0, dtype=jnp.int32), jnp.asarray(False))
+        it, scen_mask, o_up, o_down, y_star, done = jax.lax.while_loop(cond, body, init)
+
+        # final recourse: worst pole for chosen y, then v*
+        sp_vals = rec_all[:, y_star]
+        worst = sp_vals.argmax()
+        u = prob.poles[worst] * prob.u_dev
+        vals = jnp.where(feas_i[y_star], b2[y_star] * (1.0 + u), BIG)
+        v_star = vals.argmin()
+        return y_star, v_star, o_up, o_down, it
+
+    y_f, v_star, o_up, o_down, iters = jax.vmap(per_task)(feas_f)
+    # graceful margin relaxation: tasks infeasible *with* the robust margin
+    # fall back to the max-accuracy configuration (which also covers margin-
+    # free feasibility when any config clears A^q exactly)
+    none_ok = ~feas_f.any(axis=(1, 2))
+    f_flat = f.transpose(0, 4, 1, 2, 3).reshape(f.shape[0], -1)
+    best_acc = f_flat.argmax(axis=1)
+    ba_f = best_acc // sys.num_versions
+    ba_v = best_acc % sys.num_versions
+    y_f = jnp.where(none_ok, ba_f, y_f)
+    v_star = jnp.where(none_ok, ba_v, v_star)
+    # unflatten first-stage index F = 2*N*Z -> (route, r, p)
+    nz = sys.n_res * sys.n_fps
+    route = y_f // nz
+    rp = y_f % nz
+    r_idx = rp // sys.n_fps
+    p_idx = rp % sys.n_fps
+    return {
+        "route": route, "r": r_idx, "p": p_idx, "v": v_star,
+        "o_up": o_up, "o_down": o_down, "iters": iters, "infeasible": none_ok,
+    }
+
+
+def exact_oracle(prob: RobustProblem, difficulty, acc_req):
+    """Brute force min_y max_{u∈poles} min_v — test oracle."""
+    sys = prob.sys
+    f = accuracy_table(sys, difficulty)
+    feas = f >= (acc_req + sys.acc_margin_robust)[:, None, None, None, None]
+    c1 = prob.c1.transpose(2, 0, 1).reshape(-1)
+    b2 = prob.b2.transpose(3, 0, 1, 2).reshape(-1, sys.num_versions)
+    feas_f = feas.transpose(0, 4, 1, 2, 3).reshape(feas.shape[0], -1, sys.num_versions)
+
+    def per_task(feas_i):
+        u = prob.poles[:, None, :] * prob.u_dev        # (P, 1, K)
+        vals = jnp.where(feas_i[None], b2[None] * (1.0 + u), BIG)  # (P, F, K)
+        rec = vals.min(axis=-1)                         # (P, F)
+        worst = rec.max(axis=0)                         # (F,)
+        fs_ok = feas_i.any(axis=-1)
+        obj = jnp.where(fs_ok, c1 + worst, BIG)
+        y = obj.argmin()
+        return y, obj[y]
+
+    y, obj = jax.vmap(per_task)(feas_f)
+    return y, obj
+
+
+def total_cost(prob: RobustProblem, sol, difficulty, acc_req, u=None):
+    """Realized cost of a solution under deviation u ((K,) or None=nominal)."""
+    sys = prob.sys
+    route, r, p, v = sol["route"], sol["r"], sol["p"], sol["v"]
+    c1 = prob.c1[r, p, route]
+    b = prob.b2[r, p, v, route]
+    if u is not None:
+        b = b * (1.0 + u[v])
+    return c1 + b

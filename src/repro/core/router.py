@@ -1,0 +1,138 @@
+"""R2E-VID two-stage router (paper Alg. 1 + Alg. 2 glue).
+
+Stage 1 (Alg. 1): the temporal gate scores each segment (τ_t); the adaptive
+configuration picks the smallest resolution meeting the accuracy requirement
+under the *smallest* model (f_i(r, v1) ≥ A^q), escalates to cloud when even
+the largest edge config is infeasible, and enforces the temporal-consistency
+constraint ‖y_t − y_{t−1}‖₁ ≤ δ(|τ_t − τ_{t−1}|).
+
+Stage 2 (Alg. 2): the CCG robust optimizer refines (r, p, v, y) under the
+Γ-budget uncertainty set, warm-started from Stage 1.
+
+The bandwidth budget C6 (Σ B_i ≤ B) is enforced by a vectorized demotion
+repair pass: tasks with the most bandwidth and most accuracy slack step down
+fidelity until the budget holds.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cost_model import SystemConfig, accuracy_table, cost_tables
+from repro.core.gating import GateConfig, gate_scan_batch
+from repro.core.robust import BIG, RobustProblem, solve_ccg
+
+
+@dataclasses.dataclass(frozen=True)
+class RouterConfig:
+    tau_cloud: float = 0.55       # Stage-1 warm-start cloud threshold
+    delta0: float = 0.0           # temporal consistency: δ(x) = δ0 + δ1·x
+    delta1: float = 4.0
+    repair_rounds: int = 8        # C6 demotion passes
+
+
+# ---------------------------------------------------------------------------
+# Stage 1: adaptive edge-cloud configuration (Alg. 1)
+# ---------------------------------------------------------------------------
+def stage1_configure(sys: SystemConfig, taus, difficulty, acc_req, prev_route, prev_tau,
+                     rcfg: RouterConfig = RouterConfig()):
+    """Vectorized Alg. 1.  All inputs (M,).  Returns route, r_idx warm starts."""
+    f = accuracy_table(sys, difficulty)                  # (M, N, Z, K, 2)
+    # f_i(r, v1) at the max fps, per tier (Alg.1 line 3: guided by τ)
+    f_edge_v1 = f[:, :, -1, 0, 0]                        # (M, N)
+    feasible_edge = f_edge_v1 >= acc_req[:, None]
+    # smallest feasible resolution on edge (Alg.1 lines 4-5)
+    first_ok = jnp.argmax(feasible_edge, axis=1)
+    any_ok = feasible_edge.any(axis=1)
+    r_idx = jnp.where(any_ok, first_ok, sys.n_res - 1)
+    # Alg.1 line 8: escalate to cloud while infeasible on edge
+    route = jnp.where(any_ok, (taus > rcfg.tau_cloud).astype(jnp.int32), 1)
+    # temporal consistency constraint (Eq. after (6)):
+    # |y_t - y_{t-1}| <= δ(|τ_t - τ_{t-1}|); with binary y this means a route
+    # FLIP is only allowed when the gate moved enough.
+    allowed = (jnp.abs(taus - prev_tau) * rcfg.delta1 + rcfg.delta0) >= 1.0
+    flip = route != prev_route
+    route = jnp.where(flip & ~allowed & (prev_route >= 0), prev_route, route)
+    return route, r_idx
+
+
+# ---------------------------------------------------------------------------
+# C6 bandwidth repair
+# ---------------------------------------------------------------------------
+def enforce_bandwidth(sys: SystemConfig, sol, difficulty, acc_req, total_budget=None,
+                      rounds: int = 8):
+    """Demote (r, p) of over-budget tasks with the largest bandwidth draw that
+    remain feasible after demotion; fixed-round vectorized repair."""
+    _, _, bw_tab = cost_tables(sys)                      # (N, Z, 2) Mbps
+    f = accuracy_table(sys, difficulty)
+    budget = sys.total_bw_mbps if total_budget is None else total_budget
+
+    margin = sys.acc_margin_robust
+
+    def round_fn(state, _):
+        r, p = state
+        bw = bw_tab[r, p, sol["route"]]
+        over = bw.sum() > budget
+        # candidate demotion: prefer dropping fps, then resolution
+        p_dn = jnp.maximum(p - 1, 0)
+        r_dn = jnp.maximum(r - 1, 0)
+        f_pdn = f[jnp.arange(r.shape[0]), r, p_dn, sol["v"], sol["route"]]
+        f_rdn = f[jnp.arange(r.shape[0]), r_dn, p, sol["v"], sol["route"]]
+        can_p = (p > 0) & (f_pdn >= acc_req + margin)
+        can_r = (r > 0) & (f_rdn >= acc_req + margin)
+        gain_p = bw - bw_tab[r, p_dn, sol["route"]]
+        gain_r = bw - bw_tab[r_dn, p, sol["route"]]
+        gain = jnp.where(can_p, gain_p, jnp.where(can_r, gain_r, -BIG))
+        pick = gain.argmax()
+        do = over & (gain[pick] > 0)
+        use_p = can_p[pick]
+        r = r.at[pick].set(jnp.where(do & ~use_p, r_dn[pick], r[pick]))
+        p = p.at[pick].set(jnp.where(do & use_p, p_dn[pick], p[pick]))
+        return (r, p), bw.sum()
+
+    (r, p), bw_hist = jax.lax.scan(round_fn, (sol["r"], sol["p"]), None, length=rounds)
+    return dict(sol, r=r, p=p), bw_hist
+
+
+# ---------------------------------------------------------------------------
+# Full two-stage pipeline
+# ---------------------------------------------------------------------------
+def route(
+    prob: RobustProblem,
+    gate_cfg: GateConfig,
+    gate_params,
+    dx_segments,          # (M, T, d) motion features per stream segment window
+    difficulty,           # (M,)
+    acc_req,              # (M,)
+    prev_route=None,      # (M,) previous segment's route (-1 = none)
+    prev_tau=None,
+    rcfg: RouterConfig = RouterConfig(),
+):
+    sys = prob.sys
+    m = dx_segments.shape[0]
+    if prev_route is None:
+        prev_route = -jnp.ones((m,), jnp.int32)
+    if prev_tau is None:
+        prev_tau = jnp.zeros((m,))
+
+    taus_seq, gates, _ = gate_scan_batch(gate_cfg, gate_params, dx_segments)
+    taus = taus_seq[:, -1]
+
+    warm_route, warm_r = stage1_configure(
+        sys, taus, difficulty, acc_req, prev_route, prev_tau, rcfg
+    )
+    sol = solve_ccg(prob, difficulty, acc_req)
+    # Stage-1 consistency overrides Stage-2 route flips that the gate forbids
+    allowed = (jnp.abs(taus - prev_tau) * rcfg.delta1 + rcfg.delta0) >= 1.0
+    flip = sol["route"] != prev_route
+    had_prev = prev_route >= 0
+    sol = dict(sol, route=jnp.where(flip & ~allowed & had_prev, prev_route, sol["route"]))
+    sol, bw_hist = enforce_bandwidth(sys, sol, difficulty, acc_req, rounds=rcfg.repair_rounds)
+    sol["tau"] = taus
+    sol["warm_route"] = warm_route
+    sol["warm_r"] = warm_r
+    sol["bw_history"] = bw_hist
+    return sol

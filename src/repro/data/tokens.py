@@ -1,0 +1,44 @@
+"""Synthetic LM token pipeline: zipf-distributed tokens with a repeated-ngram
+structure so a ~100M model actually has something learnable (copy heads)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+class TokenPipeline:
+    def __init__(self, vocab_size: int, seq_len: int, batch_size: int, seed: int = 0,
+                 d_model: int = 0, embed_inputs: bool = True, mrope: bool = False):
+        self.vocab = vocab_size
+        self.seq = seq_len
+        self.batch = batch_size
+        self.rng = np.random.default_rng(seed)
+        self.d_model = d_model
+        self.embed_inputs = embed_inputs
+        self.mrope = mrope
+
+    def _sample_tokens(self):
+        b, s, v = self.batch, self.seq + 1, self.vocab
+        base = self.rng.zipf(1.3, (b, s)).astype(np.int64) % v
+        # repeated n-gram structure: second half repeats the first half shifted
+        half = s // 2
+        base[:, half : half * 2] = base[:, :half]
+        return base.astype(np.int32)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        toks = self._sample_tokens()
+        batch = {}
+        pos = np.broadcast_to(np.arange(self.seq, dtype=np.int32), (self.batch, self.seq))
+        if self.embed_inputs:
+            batch["tokens"] = toks[:, :-1]
+        else:
+            emb = self.rng.normal(0, 1, (self.batch, self.seq, self.d_model)).astype(np.float32)
+            batch["embeddings"] = emb
+        batch["labels"] = toks[:, 1:]
+        if self.mrope:
+            batch["positions"] = np.broadcast_to(pos[:, None, :], (self.batch, 3, self.seq)).copy()
+        else:
+            batch["positions"] = pos.copy()
+        return batch

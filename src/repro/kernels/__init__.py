@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel package has kernel.py (pl.pallas_call + explicit BlockSpec VMEM
+tiling), ops.py (jit'd dispatch wrapper), and ref.py (pure-jnp oracle).
+Validated in interpret mode on CPU; compiled natively on TPU.
+
+  flash_attention  — GQA causal/windowed prefill+train attention
+  decode_attention — single-token KV-cache attention (serving hot loop)
+  mamba_scan       — blocked Mamba-1 selective scan (falcon-mamba)
+  rglru            — blocked RG-LRU recurrence (recurrentgemma)
+  temporal_gate    — fused R2E-VID gating cell (paper Eq. 5-6)
+"""
+from repro.kernels.decode_attention.ops import decode_attention  # noqa: F401
+from repro.kernels.flash_attention.ops import flash_attention  # noqa: F401
+from repro.kernels.mamba_scan.ops import selective_scan  # noqa: F401
+from repro.kernels.rglru.ops import rglru_scan  # noqa: F401
+from repro.kernels.temporal_gate.ops import gate_cell  # noqa: F401

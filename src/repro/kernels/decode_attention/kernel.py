@@ -1,0 +1,97 @@
+"""Pallas TPU decode attention: one query token vs. a long KV cache.
+
+This is the serving hot loop (decode_32k / long_500k shapes): arithmetic
+intensity is O(1) FLOP/byte, so the kernel's job is to stream the cache
+through VMEM at full HBM bandwidth while keeping the online-softmax state
+resident.  Grid = (B*KV, ns) with the cache-sequence dimension innermost;
+per step we load a (Bs, D) cache tile, accumulate (G, Bs) scores for the
+whole GQA group (rows of the MXU), and fold into the running (m, l, acc).
+The valid-length mask comes from a scalar-prefetch operand so tiles beyond
+``length`` are skipped without reading them.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                   *, bs, ns, scale):
+    si = pl.program_id(1)
+
+    @pl.when(si == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[0]
+    s_start = si * bs
+
+    @pl.when(s_start < length)
+    def _compute():
+        q = q_ref[0]                     # (G, D)
+        k = k_ref[0]                     # (Bs, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                         # (G, Bs)
+        pos = s_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < length, s, NEG_INF)
+        m_prev, l_prev = m_scr[...], l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_prev * corr + jnp.sum(p, axis=-1)
+        pv = jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[0],
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+        )
+        acc_scr[...] = acc_scr[...] * corr[:, None] + pv
+        m_scr[...] = m_new
+
+    @pl.when(si == ns - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, length, *, block_s: int = 256,
+                     interpret: bool = False):
+    """q: (B, H, D); caches: (B, KV, S, D); length: (B,) int32 -> (B, H, D)."""
+    b, h, d = q.shape
+    _, kv, s, _ = k_cache.shape
+    g = h // kv
+    bs = min(block_s, s)
+    assert s % bs == 0
+    ns = s // bs
+    qg = q.reshape(b * kv, g, d)
+    kg = k_cache.reshape(b * kv, s, d)
+    vg = v_cache.reshape(b * kv, s, d)
+    len_per_bh = jnp.repeat(length.astype(jnp.int32), kv)
+
+    kernel = functools.partial(_decode_kernel, bs=bs, ns=ns, scale=d ** -0.5)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * kv, ns),
+        in_specs=[
+            pl.BlockSpec((1,), lambda bh, si: (bh,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, g, d), lambda bh, si: (bh, 0, 0)),
+            pl.BlockSpec((1, bs, d), lambda bh, si: (bh, si, 0)),
+            pl.BlockSpec((1, bs, d), lambda bh, si: (bh, si, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, d), lambda bh, si: (bh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * kv, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(len_per_bh, qg, kg, vg)
+    return out.reshape(b, h, d)

@@ -1,0 +1,23 @@
+"""jit'd public wrapper: dispatches Pallas on TPU, interpret/ref elsewhere."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.decode_attention.kernel import decode_attention as _pallas
+from repro.kernels.decode_attention.ref import decode_attention_ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("block_s", "force"))
+def decode_attention(q, k_cache, v_cache, length, *, block_s: int = 256,
+                     force: str = "auto"):
+    use_pallas = force == "pallas" or (force == "auto" and _on_tpu())
+    if use_pallas:
+        return _pallas(q, k_cache, v_cache, length, block_s=block_s,
+                       interpret=not _on_tpu())
+    return _ref(q, k_cache, v_cache, length)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for single-token KV-cache decode attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k_cache, v_cache, length):
+    """q: (B, H, D); k/v_cache: (B, KV, S, D); length: (B,) valid entries.
+
+    Returns (B, H, D).  fp32 softmax; positions >= length are masked.
+    """
+    b, h, d = q.shape
+    _, kv, s, _ = k_cache.shape
+    g = h // kv
+    qg = q.reshape(b, kv, g, d)
+    scores = jnp.einsum(
+        "bkgd,bksd->bkgs", qg.astype(jnp.float32), k_cache.astype(jnp.float32)
+    ) * (d ** -0.5)
+    valid = jnp.arange(s)[None, :] < length[:, None]
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bksd->bkgd", w, v_cache.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(q.dtype)

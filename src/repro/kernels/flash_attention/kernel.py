@@ -1,0 +1,130 @@
+"""Pallas TPU flash attention: GQA, causal, optional sliding window.
+
+Tiling: grid = (B*KV, nq, nk) with the k dimension innermost (sequential on
+TPU), so the online-softmax state (m, l, acc) lives in VMEM scratch across k
+steps.  The q tile is (G*Bq, D) — the GQA group is folded into MXU rows so
+even kv=1 (MQA) archs fill the systolic array.  Fully-masked k tiles
+(above the causal diagonal / outside the window) are skipped with pl.when.
+
+Block sizes default to (128, 128): the VMEM working set is
+  q (G*Bq, D) + k/v (Bk, D) + acc (G*Bq, D) f32 + scores (G*Bq, Bk) f32
+~= 8·128·128·(2+2+2+4+4) bytes ≈ 1.8 MB for G=8, comfortably inside the
+16 MB VMEM budget, and every matmul dim is a multiple of the 128-lane MXU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                  *, bq, bk, nk, window, causal, scale):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * bq
+    k_start = ki * bk
+
+    def _compute():
+        q = q_ref[0]                      # (G, Bq, D) -> fold G
+        g, _, d = q.shape
+        q2 = q.reshape(g * bq, d)
+        k = k_ref[0]                      # (Bk, D)
+        s = jax.lax.dot_general(
+            q2, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                          # (G*Bq, Bk)
+        # rows are (g, bq) flattened; the token position depends on row % bq
+        row = jax.lax.broadcasted_iota(jnp.int32, (g * bq, bk), 0)
+        q_pos = q_start + jnp.remainder(row, bq)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (g * bq, bk), 1)
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask &= q_pos >= k_pos
+        if window is not None:
+            mask &= (q_pos - k_pos) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        pv = jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[0],
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+        )
+        acc_scr[...] = acc_scr[...] * corr[:, None] + pv
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    # skip tiles that are fully masked
+    live = True
+    if causal:
+        live = q_start + bq - 1 >= k_start
+    if window is not None:
+        live = jnp.logical_and(live, k_start + bk - 1 > q_start - window)
+    pl.when(live)(_compute)
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        g = q_ref.shape[1]
+        d = acc_scr.shape[-1]
+        l = jnp.maximum(l_scr[...], 1e-30)
+        out = (acc_scr[...] / l[:, None]).reshape(g, bq, d)
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+def flash_attention(
+    q, k, v, *, window: Optional[int] = None, causal: bool = True,
+    block_q: int = 128, block_k: int = 128, interpret: bool = False,
+):
+    """q: (B, H, Sq, D); k/v: (B, KV, Sk, D) -> (B, H, Sq, D)."""
+    b, h, sq, d = q.shape
+    _, kv, sk, _ = k.shape
+    g = h // kv
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    assert sq % bq == 0 and sk % bk == 0, (sq, bq, sk, bk)
+    nq, nk = sq // bq, sk // bk
+    scale = d ** -0.5
+
+    qg = q.reshape(b, kv, g, sq, d).reshape(b * kv, g, sq, d)
+    kg = k.reshape(b * kv, sk, d)
+    vg = v.reshape(b * kv, sk, d)
+
+    kernel = functools.partial(
+        _flash_kernel, bq=bq, bk=bk, nk=nk, window=window, causal=causal, scale=scale
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * kv, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, g, bq, d), lambda bh, qi, ki: (bh, 0, qi, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, qi, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, bq, d), lambda bh, qi, ki: (bh, 0, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * kv, g, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g * bq,), jnp.float32),
+            pltpu.VMEM((g * bq,), jnp.float32),
+            pltpu.VMEM((g * bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, kg, vg)
+    return out.reshape(b, kv, g, sq, d).reshape(b, h, sq, d)

@@ -1,0 +1,25 @@
+"""jit'd public wrapper: dispatches Pallas on TPU, interpret/ref elsewhere."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention as _pallas
+from repro.kernels.flash_attention.ref import attention_ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("window", "causal", "block_q", "block_k", "force"))
+def flash_attention(q, k, v, *, window: Optional[int] = None, causal: bool = True,
+                    block_q: int = 128, block_k: int = 128, force: str = "auto"):
+    use_pallas = force == "pallas" or (force == "auto" and _on_tpu())
+    if use_pallas:
+        return _pallas(q, k, v, window=window, causal=causal,
+                       block_q=block_q, block_k=block_k,
+                       interpret=not _on_tpu())
+    return _ref(q, k, v, window=window, causal=causal)

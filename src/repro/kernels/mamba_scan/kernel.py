@@ -1,0 +1,91 @@
+"""Pallas TPU blocked selective scan (Mamba-1 mixer).
+
+The XLA fallback is a per-token lax.scan whose (B, Di, N) state round-trips
+HBM every step — 64 layers x 4096 steps of ~MB-sized traffic (the dominant
+memory-roofline term for falcon-mamba, see EXPERIMENTS.md §Perf).  This
+kernel processes the time axis in VMEM tiles: grid = (b, n_di, n_t) with the
+time dimension innermost; the (BD, N) state lives in VMEM scratch across
+time tiles, so HBM traffic collapses to "read x/dt/B/C once, write y once".
+
+Within a tile the recurrence is a fori_loop over BT steps on registers/VMEM;
+the channel block BD (lanes) is vectorized on the VPU.  d_state N=16 rides
+in the sublane dimension.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mamba_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, d_ref, h0_ref,
+                  y_ref, hout_ref, h_scr, *, bt, nt):
+    ti = pl.program_id(2)
+
+    @pl.when(ti == 0)
+    def _init():
+        h_scr[...] = h0_ref[0]
+
+    x = x_ref[0].astype(jnp.float32)     # (BT, BD)
+    dt = dt_ref[0].astype(jnp.float32)   # (BT, BD)
+    bm = b_ref[0].astype(jnp.float32)    # (BT, N)
+    cm = c_ref[0].astype(jnp.float32)    # (BT, N)
+    a = a_ref[...].astype(jnp.float32)   # (BD, N)
+    d = d_ref[...].astype(jnp.float32)   # (BD,)
+
+    def step(t, carry):
+        h = carry                         # (BD, N)
+        da = jnp.exp(dt[t][:, None] * a)
+        h = da * h + (dt[t] * x[t])[:, None] * bm[t][None, :]
+        y_t = jnp.sum(h * cm[t][None, :], axis=-1) + d * x[t]
+        y_ref[0, t, :] = y_t.astype(y_ref.dtype)
+        return h
+
+    h_final = jax.lax.fori_loop(0, bt, step, h_scr[...])
+    h_scr[...] = h_final
+
+    @pl.when(ti == nt - 1)
+    def _finalize():
+        hout_ref[0] = h_scr[...]
+
+
+def selective_scan(x, dt, B, C, A, D, h0=None, *, block_t: int = 128,
+                   block_d: int = 512, interpret: bool = False):
+    """x, dt: (b, S, Di); B, C: (b, S, N); A: (Di, N); D: (Di,)."""
+    b, s, di = x.shape
+    n = A.shape[1]
+    bt = min(block_t, s)
+    bd = min(block_d, di)
+    assert s % bt == 0 and di % bd == 0
+    nt, nd = s // bt, di // bd
+    if h0 is None:
+        h0 = jnp.zeros((b, di, n), jnp.float32)
+
+    kernel = functools.partial(_mamba_kernel, bt=bt, nt=nt)
+    y, h_out = pl.pallas_call(
+        kernel,
+        grid=(b, nd, nt),
+        in_specs=[
+            pl.BlockSpec((1, bt, bd), lambda bi, dii, ti: (bi, ti, dii)),  # x
+            pl.BlockSpec((1, bt, bd), lambda bi, dii, ti: (bi, ti, dii)),  # dt
+            pl.BlockSpec((1, bt, n), lambda bi, dii, ti: (bi, ti, 0)),     # B
+            pl.BlockSpec((1, bt, n), lambda bi, dii, ti: (bi, ti, 0)),     # C
+            pl.BlockSpec((bd, n), lambda bi, dii, ti: (dii, 0)),           # A
+            pl.BlockSpec((bd,), lambda bi, dii, ti: (dii,)),               # D
+            pl.BlockSpec((1, bd, n), lambda bi, dii, ti: (bi, dii, 0)),    # h0
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bt, bd), lambda bi, dii, ti: (bi, ti, dii)),
+            pl.BlockSpec((1, bd, n), lambda bi, dii, ti: (bi, dii, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s, di), jnp.float32),
+            jax.ShapeDtypeStruct((b, di, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bd, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, B, C, A, D, h0)
+    return y, h_out

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the blocked Mamba-1 selective scan kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(x, dt, B, C, A, D, h0=None):
+    """x, dt: (b, S, Di); B, C: (b, S, N); A: (Di, N); D: (Di,).
+
+    h_t = exp(dt_t·A) ⊙ h_{t-1} + dt_t·B_t·x_t ;  y_t = C_t·h_t + D ⊙ x_t
+    Returns (y (b, S, Di) f32, h_final (b, Di, N) f32).
+    """
+    b, s, di = x.shape
+    n = A.shape[1]
+    if h0 is None:
+        h0 = jnp.zeros((b, di, n), jnp.float32)
+
+    def body(h, inp):
+        x_t, dt_t, b_t, c_t = inp
+        da = jnp.exp(dt_t[..., None] * A[None])
+        h_new = da * h + dt_t[..., None] * b_t[:, None, :] * x_t[..., None]
+        y_t = jnp.einsum("bdn,bn->bd", h_new, c_t) + D[None] * x_t
+        return h_new, y_t
+
+    xs = tuple(
+        jnp.moveaxis(a.astype(jnp.float32), 1, 0) for a in (x, dt, B, C)
+    )
+    h_final, ys = jax.lax.scan(body, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), h_final

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the blocked RG-LRU scan kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(x, rgate, igate, log_a_base, h0=None):
+    """x, rgate, igate: (B, S, W) f32; log_a_base: (W,) <= 0.
+
+    a_t = exp(log_a_base ⊙ r_t);  h_t = a_t ⊙ h_{t-1} + sqrt(1-a_t²) ⊙ (i_t ⊙ x_t)
+    """
+    b, s, w = x.shape
+    if h0 is None:
+        h0 = jnp.zeros((b, w), jnp.float32)
+
+    def body(h, inp):
+        x_t, r_t, i_t = inp
+        a = jnp.exp(log_a_base[None] * r_t)
+        h_new = a * h + jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12)) * (i_t * x_t)
+        return h_new, h_new
+
+    xs = tuple(jnp.moveaxis(v.astype(jnp.float32), 1, 0) for v in (x, rgate, igate))
+    h_final, ys = jax.lax.scan(body, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), h_final

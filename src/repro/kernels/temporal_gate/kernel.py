@@ -1,0 +1,84 @@
+"""Pallas TPU fused temporal-gating cell (paper Eq. 5-6).
+
+At fleet scale the router evaluates the gate for thousands of concurrent
+streams per scheduling tick; the cell is six small matmuls + elementwise
+chains that XLA would execute as separate HBM round-trips.  This kernel
+fuses the whole step for a (BB, d) stream tile: all six weight matrices
+(d,m)/(m,m) stay resident in VMEM, the tile makes a single pass, and the
+batched streams ride the MXU rows.
+
+Grid = (n_b,); weights are broadcast blocks (same block for every program).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mm(a, b):
+    return jax.lax.dot_general(a, b, (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+
+
+def _gate_kernel(dx_ref, h_ref, vol_ref, wg_ref, ug_ref, bg_ref, alpha_ref,
+                 wr_ref, ur_ref, br_ref, wh_ref, uh_ref, bh_ref, wo_ref, bo_ref,
+                 hout_ref, tau_ref, gmean_ref):
+    dx = dx_ref[...].astype(jnp.float32)
+    h = h_ref[...].astype(jnp.float32)
+    vol = vol_ref[...].astype(jnp.float32)
+    alpha = alpha_ref[0]
+
+    g = jax.nn.sigmoid(_mm(dx, wg_ref[...]) + _mm(h, ug_ref[...]) + bg_ref[...]
+                       + (alpha * vol)[:, None])
+    r = jax.nn.sigmoid(_mm(dx, wr_ref[...]) + _mm(h, ur_ref[...]) + br_ref[...])
+    cand = jnp.tanh(_mm(dx, wh_ref[...]) + _mm(r * h, uh_ref[...]) + bh_ref[...])
+    h_new = (1.0 - g) * h + g * cand
+    tau = jax.nn.sigmoid(_mm(h_new, wo_ref[...]) + bo_ref[...])[:, 0]
+    hout_ref[...] = h_new.astype(hout_ref.dtype)
+    tau_ref[...] = tau.astype(tau_ref.dtype)
+    gmean_ref[...] = g.mean(axis=-1).astype(gmean_ref.dtype)
+
+
+def gate_cell(dx, h, vol, p, *, block_b: int = 256, interpret: bool = False):
+    """dx: (B, d); h: (B, m); vol: (B,) -> (h_new, tau, g_mean)."""
+    b, d = dx.shape
+    m = h.shape[1]
+    bb = min(block_b, b)
+    assert b % bb == 0
+    nb = b // bb
+
+    full = lambda shape: pl.BlockSpec(shape, lambda bi: tuple(0 for _ in shape))
+    out = pl.pallas_call(
+        _gate_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((bb, d), lambda bi: (bi, 0)),
+            pl.BlockSpec((bb, m), lambda bi: (bi, 0)),
+            pl.BlockSpec((bb,), lambda bi: (bi,)),
+            full((d, m)), full((m, m)), full((m,)), full((1,)),
+            full((d, m)), full((m, m)), full((m,)),
+            full((d, m)), full((m, m)), full((m,)),
+            full((m, 1)), full((1,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, m), lambda bi: (bi, 0)),
+            pl.BlockSpec((bb,), lambda bi: (bi,)),
+            pl.BlockSpec((bb,), lambda bi: (bi,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, m), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        dx, h, vol,
+        p["w_g"], p["u_g"], p["b_g"], p["alpha"].reshape(1),
+        p["w_r"], p["u_r"], p["b_r"],
+        p["w_h"], p["u_h"], p["b_h"],
+        p["w_o"], p["b_o"],
+    )
+    return out

@@ -1,0 +1,21 @@
+"""jit'd public wrapper: dispatches Pallas on TPU, interpret/ref elsewhere."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.temporal_gate.kernel import gate_cell as _pallas
+from repro.kernels.temporal_gate.ref import gate_cell_ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("block_b", "force"))
+def gate_cell(dx, h, vol, p, *, block_b: int = 256, force: str = "auto"):
+    use_pallas = force == "pallas" or (force == "auto" and _on_tpu())
+    if use_pallas:
+        return _pallas(dx, h, vol, p, block_b=block_b, interpret=not _on_tpu())
+    return _ref(dx, h, vol, p)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the fused temporal-gating cell (paper Eq. 5-6)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gate_cell_ref(dx, h, vol, p):
+    """One fused gating step for a batch of streams.
+
+    dx: (B, d); h: (B, m); vol: (B,) volatility Var(Δx_{t-T:t}).
+    p: dict with w_g,u_g,b_g,alpha,w_r,u_r,b_r,w_h,u_h,b_h,w_o,b_o.
+    Returns (h_new (B, m), tau (B,), g_mean (B,)).
+    """
+    g = jax.nn.sigmoid(dx @ p["w_g"] + h @ p["u_g"] + p["b_g"]
+                       + (p["alpha"] * vol)[:, None])
+    r = jax.nn.sigmoid(dx @ p["w_r"] + h @ p["u_r"] + p["b_r"])
+    cand = jnp.tanh(dx @ p["w_h"] + (r * h) @ p["u_h"] + p["b_h"])
+    h_new = (1.0 - g) * h + g * cand
+    tau = jax.nn.sigmoid(h_new @ p["w_o"] + p["b_o"])[:, 0]
+    return h_new, tau, g.mean(axis=-1)

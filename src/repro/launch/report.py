@@ -1,0 +1,67 @@
+"""Render the roofline table (EXPERIMENTS.md §Roofline) from dry-run JSONs."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load(out_dir="results/dryrun", mesh="single", tag=""):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(out_dir, f"*__{mesh}*.json"))):
+        r = json.load(open(f))
+        if r.get("tag", "") != tag:
+            continue
+        rows.append(r)
+    return rows
+
+
+def markdown_table(out_dir="results/dryrun", mesh="single", tag=""):
+    rows = load(out_dir, mesh, tag)
+    lines = [
+        "| arch | shape | compute (ms) | memory (ms) | collective (ms) | dominant | "
+        "MODEL/HLO flops | bound (ms) |",
+        "|---|---|---:|---:|---:|---|---:|---:|",
+    ]
+    for r in rows:
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | FAILED | — | — |")
+            continue
+        t = r["terms"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']*1e3:.1f} | "
+            f"{t['memory_s']*1e3:.1f} | {t['collective_s']*1e3:.1f} | "
+            f"{t['dominant']} | {r['useful_flops_ratio']:.2f} | {t['bound_s']*1e3:.1f} |"
+        )
+    return "\n".join(lines)
+
+
+def memory_table(out_dir="results/dryrun", mesh="single"):
+    rows = load(out_dir, mesh)
+    lines = [
+        "| arch | shape | args (GB) | output (GB) | temp (GB) | fits 16 GB (TPU-adj) |",
+        "|---|---|---:|---:|---:|---|",
+    ]
+    for r in rows:
+        if r["status"] != "ok":
+            continue
+        m = r.get("memory", {})
+        arg = m.get("argument_size_in_bytes", 0) / 1e9
+        out = m.get("output_size_in_bytes", 0) / 1e9
+        tmp = m.get("temp_size_in_bytes", 0) / 1e9
+        # CPU float-normalization roughly doubles bf16 temporaries; donation
+        # (unsupported on CPU) double-counts in/out.  TPU-adjusted estimate:
+        adj = arg + tmp / 2
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {arg:.1f} | {out:.1f} | {tmp:.1f} | "
+            f"{'yes' if adj <= 16.0 else 'NO'} ({adj:.1f}) |"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import sys
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "single"
+    print(markdown_table(mesh=mesh))
+    print()
+    print(memory_table(mesh=mesh))

@@ -1,0 +1,116 @@
+"""Roofline term derivation from compiled dry-run artifacts.
+
+TPU v5e hardware constants (per assignment):
+  peak bf16 compute : 197 TFLOP/s per chip
+  HBM bandwidth     : 819 GB/s per chip
+  ICI link bandwidth: ~50 GB/s per link
+
+``compiled.cost_analysis()`` of an SPMD-partitioned module reports the
+*per-device* program, so:
+  compute term    = per_dev_FLOPs / peak            (== global/(chips*peak))
+  memory term     = per_dev_bytes / hbm_bw
+  collective term = per_dev_collective_bytes / link_bw
+Collective bytes are not in cost_analysis; we parse the post-SPMD HLO text
+and sum operand sizes of all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute ops.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+PEAK_FLOPS = 197e12      # bf16 FLOP/s per chip
+HBM_BW = 819e9           # B/s per chip
+ICI_BW = 50e9            # B/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+
+# e.g.  %x = bf16[16,4096,512]{2,1,0} all-gather(...)
+_INSTR_RE = re.compile(
+    r"=\s*(?:\([^)]*\)\s*)?[\w\[\]{},: ]*?(" + "|".join(_COLLECTIVES) + r")(?:-start|-done)?\("
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum operand sizes per collective kind from post-SPMD HLO text."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        if kind + "-done(" in line:
+            continue  # operands of -done are the -start token, skip double count
+        # operands are inside the call parens: take shapes after the op name
+        call = line[m.end() - 1:]
+        total = 0
+        for dt, dims in _SHAPE_RE.findall(call):
+            total += _shape_bytes(dt, dims)
+        out[kind] += total
+    return out
+
+
+def roofline_terms(acc: dict) -> dict:
+    """acc: output of repro.launch.hlo_cost.analyze (per-device program).
+
+    Primary terms use the bf16-equivalent byte counts (the CPU backend
+    float-normalizes bf16 to f32; see hlo_cost); raw counts are also kept.
+    """
+    flops = float(acc.get("flops", 0.0))
+    byt_raw = float(acc.get("bytes", 0.0))
+    byt = float(acc.get("bytes_adj", byt_raw))
+    coll = acc.get("collectives", {})
+    coll_raw = float(sum(coll.values()))
+    coll_total = float(acc.get("collectives_adj_total", coll_raw))
+    compute_s = flops / PEAK_FLOPS
+    memory_s = byt / HBM_BW
+    collective_s = coll_total / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s, "collective_s": collective_s}
+    dom = max(terms, key=terms.get)
+    bound = max(terms.values())
+    total = sum(terms.values())
+    return {
+        **terms,
+        "dominant": dom.replace("_s", ""),
+        "bound_s": bound,
+        "flops_per_dev": flops,
+        "bytes_per_dev": byt,
+        "bytes_per_dev_raw_f32": byt_raw,
+        "collective_bytes_per_dev": coll_total,
+        "collective_bytes_per_dev_raw_f32": coll_raw,
+        "collective_breakdown": coll,
+        # fraction of the step spent on the dominant term if perfectly overlapped
+        "overlap_efficiency": bound / total if total > 0 else 0.0,
+    }
+
+
+def model_flops(cfg, shape: dict) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE); D = tokens processed this step."""
+    n = cfg.param_count(active_only=True)
+    kind = shape["kind"]
+    if kind == "train":
+        tokens = shape["batch"] * shape["seq"]
+        return 6.0 * n * tokens
+    if kind == "prefill":
+        tokens = shape["batch"] * shape["seq"]
+        return 2.0 * n * tokens
+    return 2.0 * n * shape["batch"]  # decode: one token per sequence

@@ -1,0 +1,173 @@
+"""jit-able train / prefill / serve steps + ShapeDtypeStruct input specs.
+
+``input_specs`` follows the dry-run pattern: weak-type-correct, shardable
+stand-ins with NamedShardings attached — no device allocation ever happens
+for the full-size configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import Ctx, cache_specs, decode_step, loss_fn, model_specs, prefill
+from repro.models.config import ModelConfig
+from repro.models.params import shape_dtypes, shardings as spec_shardings
+from repro.sharding.rules import ShardingRules, make_rules
+from repro.train.optimizer import AdamWConfig, AdamWState, init as adamw_init, update as adamw_update
+
+# The assigned input-shape sets (LM family): seq_len x global_batch.
+SHAPES = {
+    "train_4k": {"seq": 4096, "batch": 256, "kind": "train"},
+    "prefill_32k": {"seq": 32768, "batch": 32, "kind": "prefill"},
+    "decode_32k": {"seq": 32768, "batch": 128, "kind": "decode"},
+    "long_500k": {"seq": 524288, "batch": 1, "kind": "decode"},
+}
+
+
+def rules_for(cfg: ModelConfig, mesh: Mesh, kind: str) -> ShardingRules:
+    mode = "train" if kind == "train" else "serve"
+    overrides = dict(cfg.sharding_overrides.get(mode, {}))
+    if kind == "prefill" and cfg.ssm is None and cfg.rglru is None:
+        # sequence-parallel residuals at layer boundaries: turns the TP
+        # activation all-reduces into reduce-scatter(+all-gather) and runs
+        # the inter-block elementwise work 16-way sharded.  Decode cannot
+        # (S=1) and recurrent mixers need the full sequence per layer (SP
+        # measured -3.6% there), so this applies to attention-only prefill
+        # (§Perf iteration 9: yi -3.5%, qwen3 -3.1%).
+        overrides.setdefault("act_seq_sp", "model")
+    return make_rules(mesh, mode, overrides)
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+def make_train_step(cfg: ModelConfig, rules: Optional[ShardingRules], opt_cfg: AdamWConfig):
+    ctx = Ctx(cfg=cfg, rules=rules, mode="train")
+
+    def train_step(params, opt_state: AdamWState, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(ctx, p, batch), has_aux=True
+        )(params)
+        new_params, new_opt, opt_metrics = adamw_update(opt_cfg, grads, opt_state, params)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, rules: Optional[ShardingRules]):
+    ctx = Ctx(cfg=cfg, rules=rules, mode="prefill")
+
+    def prefill_step(params, batch):
+        return prefill(ctx, params, batch)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, rules: Optional[ShardingRules]):
+    ctx = Ctx(cfg=cfg, rules=rules, mode="decode")
+
+    def serve_step(params, cache, batch):
+        return decode_step(ctx, params, cache, batch)
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins)
+# ---------------------------------------------------------------------------
+def _sds(shape, dtype, mesh, rules, axes):
+    if mesh is None or rules is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=rules.fitted_sharding(mesh, axes, shape))
+
+
+def batch_specs(cfg: ModelConfig, mesh, rules, *, batch: int, seq: int, kind: str):
+    """Model-input stand-ins for one step kind."""
+    s = 1 if kind == "decode" else seq
+    out = {}
+    if cfg.embed_inputs:
+        out["tokens"] = _sds((batch, s), jnp.int32, mesh, rules, ("batch", "act_seq"))
+    else:
+        out["embeddings"] = _sds(
+            (batch, s, cfg.d_model), jnp.bfloat16, mesh, rules, ("batch", "act_seq", "act_embed")
+        )
+    if kind != "decode":
+        # positions are a runtime input (not arange constants) so attention
+        # masks are data-dependent and XLA cannot hoist them out of kv scans
+        if cfg.mrope:
+            out["positions"] = _sds((batch, 3, s), jnp.int32, mesh, rules, ("batch", None, "act_seq"))
+        else:
+            out["positions"] = _sds((batch, s), jnp.int32, mesh, rules, ("batch", "act_seq"))
+    elif cfg.mrope:
+        out["positions"] = _sds((batch, 3, s), jnp.int32, mesh, rules, ("batch", None, "act_seq"))
+    if kind == "train":
+        out["labels"] = _sds((batch, s), jnp.int32, mesh, rules, ("batch", "act_seq"))
+    return out
+
+
+def params_specs(cfg: ModelConfig, mesh, rules, *, kind: str):
+    serve = kind != "train"
+    tree = model_specs(cfg, serve=serve)
+    dtype = jnp.bfloat16 if serve else None  # serve float weights in bf16
+    if mesh is None:
+        return shape_dtypes(tree, dtype_override=dtype)
+    sh = spec_shardings(tree, mesh, rules)
+    return shape_dtypes(tree, dtype_override=dtype, shardings=sh)
+
+
+def cache_input_specs(cfg: ModelConfig, mesh, rules, *, batch: int, seq: int):
+    # the assigned decode shapes specify a KV cache of EXACTLY seq_len; the
+    # serving headroom (append slots) is a runtime concern, zeroed here
+    cfg0 = dataclasses.replace(cfg, decode_headroom=0)
+    tree = cache_specs(cfg0, batch, seq)
+    if mesh is None:
+        return shape_dtypes(tree)
+    sh = spec_shardings(tree, mesh, rules)
+    return shape_dtypes(tree, shardings=sh)
+
+
+def opt_state_specs(params_tree):
+    zeros = jax.tree_util.tree_map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32, sharding=getattr(p, "sharding", None)),
+        params_tree,
+    )
+    step = jax.ShapeDtypeStruct((), jnp.int32)
+    return AdamWState(step=step, mu=zeros, nu=jax.tree_util.tree_map(lambda x: x, zeros))
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, mesh=None, rules=None):
+    """Full argument spec tuple for the step that `shape_name` lowers."""
+    sh = SHAPES[shape_name]
+    kind = sh["kind"]
+    if rules is None and mesh is not None:
+        rules = rules_for(cfg, mesh, kind)
+    p = params_specs(cfg, mesh, rules, kind=kind)
+    b = batch_specs(cfg, mesh, rules, batch=sh["batch"], seq=sh["seq"], kind=kind)
+    if kind == "train":
+        return (p, opt_state_specs(p), b)
+    if kind == "prefill":
+        return (p, b)
+    c = cache_input_specs(cfg, mesh, rules, batch=sh["batch"], seq=sh["seq"])
+    return (p, c, b)
+
+
+def step_for(cfg: ModelConfig, shape_name: str, rules, opt_cfg: Optional[AdamWConfig] = None):
+    kind = SHAPES[shape_name]["kind"]
+    if kind == "train":
+        return make_train_step(cfg, rules, opt_cfg or AdamWConfig()), (0, 1)
+    if kind == "prefill":
+        return make_prefill_step(cfg, rules), ()
+    return make_serve_step(cfg, rules), (1,)
+
+
+def applicable_shapes(cfg: ModelConfig) -> list[str]:
+    """long_500k only for sub-quadratic archs (see DESIGN.md §4)."""
+    out = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.sub_quadratic:
+        out.append("long_500k")
+    return out

@@ -1,0 +1,65 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b --smoke \
+      --steps 200 --batch 8 --seq 128
+
+On a real TPU fleet the same entrypoint runs the full config on the
+production mesh (--mesh single|multi); on CPU use --smoke (reduced config,
+host mesh).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.data.tokens import TokenPipeline
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.sharding.rules import make_rules
+from repro.train.optimizer import AdamWConfig
+from repro.train.trainer import TrainConfig, Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b", choices=list(ARCH_IDS))
+    ap.add_argument("--smoke", action="store_true", help="reduced config on host devices")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="results/ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--grad-compression", action="store_true")
+    ap.add_argument("--mesh", default="host", choices=["host", "single", "multi"])
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.mesh == "host":
+        mesh = make_host_mesh()
+    else:
+        mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+    rules = make_rules(mesh, "train", cfg.sharding_overrides.get("train"))
+
+    tcfg = TrainConfig(
+        steps=args.steps,
+        ckpt_every=args.ckpt_every,
+        ckpt_dir=args.ckpt_dir,
+        grad_compression=args.grad_compression,
+        opt=AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                        total_steps=args.steps),
+    )
+    data = iter(TokenPipeline(cfg.vocab_size, args.seq, args.batch,
+                              d_model=cfg.d_model, embed_inputs=cfg.embed_inputs,
+                              mrope=cfg.mrope))
+    with mesh:
+        tr = Trainer(cfg, tcfg, mesh=mesh, rules=rules)
+        state, hist = tr.run(data)
+    for h in hist:
+        print(f"step {h['step']:6d} loss {h['loss']:.4f} gnorm {h['grad_norm']:.3f}")
+    print(f"done: {tr.step} steps, arch={cfg.name}, devices={len(jax.devices())}")
+
+
+if __name__ == "__main__":
+    main()

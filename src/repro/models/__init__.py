@@ -1,0 +1,11 @@
+from repro.models.config import ModelConfig, MoEConfig, RGLRUConfig, SSMConfig  # noqa: F401
+from repro.models.layers import Ctx  # noqa: F401
+from repro.models.model import (  # noqa: F401
+    build_segments,
+    cache_specs,
+    decode_step,
+    forward,
+    loss_fn,
+    model_specs,
+    prefill,
+)

@@ -1,0 +1,295 @@
+"""GQA attention: chunked (memory-efficient) prefill/train + cache decode.
+
+The pure-XLA path implements flash-attention-style online softmax with a
+double (q-chunk x kv-chunk) scan so the live score buffer is bounded at
+``q_chunk x kv_chunk`` regardless of sequence length.  Windowed variants
+(mixtral SWA, recurrentgemma local attention) gather only the window slice
+per q-chunk, keeping compute O(S*W).  The Pallas kernel in
+``repro.kernels.flash_attention`` is the TPU performance path; this module is
+also its oracle.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import Ctx, apply_mrope, apply_rope, rmsnorm
+from repro.models.params import ParamSpec
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+def attn_specs(cfg: ModelConfig) -> dict:
+    """Fused-head weight layouts (d, H*hd): the flattened head dim is always
+    a multiple of the TP degree even when head counts (56, 12, 24, ...) are
+    not, so the weights shard evenly over "model"."""
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    s_in = d ** -0.5
+    s_out = (h * hd) ** -0.5 / math.sqrt(2 * cfg.num_layers)
+    specs = {
+        "wq": ParamSpec((d, h * hd), ("embed", "heads_flat"), stddev=s_in),
+        "wk": ParamSpec((d, kv * hd), ("embed", "heads_flat"), stddev=s_in),
+        "wv": ParamSpec((d, kv * hd), ("embed", "heads_flat"), stddev=s_in),
+        "wo": ParamSpec((h * hd, d), ("heads_flat", "embed"), stddev=s_out),
+    }
+    if cfg.qkv_bias:
+        specs["bq"] = ParamSpec((h * hd,), ("heads_flat",), init="zeros")
+        specs["bk"] = ParamSpec((kv * hd,), ("heads_flat",), init="zeros")
+        specs["bv"] = ParamSpec((kv * hd,), ("heads_flat",), init="zeros")
+    if cfg.qk_norm:
+        specs["q_norm"] = ParamSpec((hd,), ("head_dim",), init="ones")
+        specs["k_norm"] = ParamSpec((hd,), ("head_dim",), init="ones")
+    return specs
+
+
+def _head_rmsnorm(x, scale, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked causal attention (full or windowed), GQA-aware.
+# q: (B, Sq, H, D)  k/v: (B, Sk, KV, D)
+# ---------------------------------------------------------------------------
+def chunked_attention(
+    q,
+    k,
+    v,
+    positions,
+    *,
+    window: Optional[int] = None,
+    q_chunk: int = 1024,
+    k_chunk: int = 1024,
+):
+    """positions: (B, S) int32 token positions for BOTH q and k (self-attn).
+
+    Masks are derived from the runtime ``positions`` array (not from loop
+    counters): this keeps XLA from hoisting per-iteration masks out of the
+    kv scan into a stacked O(nq*nk*Cq*Ck) pred buffer.
+    """
+    b, sq, h, d = q.shape
+    _, sk, kv, _ = k.shape
+    g = h // kv
+    scale = d ** -0.5
+    q_chunk = min(q_chunk, sq)
+    k_chunk = min(k_chunk, sk)
+    # pad seq dims up to chunk multiples; padded keys get position +inf so
+    # causality masks them; padded queries are sliced off the output.
+    sq_pad = (-sq) % q_chunk
+    sk_pad = (-sk) % k_chunk
+    q_pos = positions.astype(jnp.int32)
+    k_pos = positions.astype(jnp.int32)
+    if sq_pad:
+        q = jnp.pad(q, ((0, 0), (0, sq_pad), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, sq_pad)))
+    if sk_pad:
+        k = jnp.pad(k, ((0, 0), (0, sk_pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, sk_pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, sk_pad)), constant_values=2**30)
+    orig_sq, sq, sk = sq, sq + sq_pad, sk + sk_pad
+    nq = sq // q_chunk
+
+    qg = q.reshape(b, nq, q_chunk, kv, g, d).transpose(1, 0, 3, 4, 2, 5)
+    qp = q_pos.reshape(b, nq, q_chunk).transpose(1, 0, 2)  # (nq, B, Cq)
+    # qg: (nq, B, KV, G, Cq, D)
+
+    if window is not None and sk > window + q_chunk:
+        out = _windowed_blocks(qg, qp, k, v, k_pos, window, q_chunk, scale)
+    else:
+        out = _full_blocks(qg, qp, k, v, k_pos, window, k_chunk, scale)
+    # out: (nq, B, KV, G, Cq, D) -> (B, Sq, H, D)
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq, h, d)
+    return out[:, :orig_sq]
+
+
+def _online_softmax_block(carry, scores, v_blk):
+    """scores: (..., Cq, Ck) f32; v_blk: (B, KV, Ck, D)."""
+    m_prev, l_prev, acc = carry
+    m_cur = jnp.max(scores, axis=-1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(scores - m_new[..., None])
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=-1)
+    pv = jnp.einsum(
+        "bkgqc,bkcd->bkgqd", p.astype(v_blk.dtype), v_blk
+    ).astype(jnp.float32)
+    acc_new = acc * corr[..., None] + pv
+    return m_new, l_new, acc_new
+
+
+def _full_blocks(qg, qp, k, v, k_pos, window, k_chunk, scale):
+    nq, b, kvh, g, cq, d = qg.shape
+    sk = k.shape[1]
+    nk = sk // k_chunk
+    assert sk % k_chunk == 0, (sk, k_chunk)
+    kb = k.transpose(0, 2, 1, 3).reshape(b, kvh, nk, k_chunk, d).transpose(2, 0, 1, 3, 4)
+    vb = v.transpose(0, 2, 1, 3).reshape(b, kvh, nk, k_chunk, d).transpose(2, 0, 1, 3, 4)
+    kpb = k_pos.reshape(b, nk, k_chunk).transpose(1, 0, 2)  # (nk, B, Ck)
+    # kb/vb: (nk, B, KV, Ck, D)
+
+    def q_body(_, q_xs):
+        q_blk, q_pos = q_xs  # (B, KV, G, Cq, D), (B, Cq)
+
+        def k_body(carry, k_xs):
+            k_blk, v_blk, kp = k_xs
+            s = jnp.einsum("bkgqd,bkcd->bkgqc", q_blk, k_blk).astype(jnp.float32)
+            s = s * scale
+            mask = q_pos[:, :, None] >= kp[:, None, :]  # (B, Cq, Ck) data-dep
+            if window is not None:
+                mask &= q_pos[:, :, None] - kp[:, None, :] < window
+            s = jnp.where(mask[:, None, None], s, NEG_INF)
+            return _online_softmax_block(carry, s, v_blk), None
+
+        init = (
+            jnp.full((b, kvh, g, cq), NEG_INF, jnp.float32),
+            jnp.zeros((b, kvh, g, cq), jnp.float32),
+            jnp.zeros((b, kvh, g, cq, d), jnp.float32),
+        )
+        (m, l, acc), _ = jax.lax.scan(k_body, init, (kb, vb, kpb))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q_blk.dtype)
+
+    _, out = jax.lax.scan(q_body, None, (qg, qp))
+    return out
+
+
+def _windowed_blocks(qg, qp, k, v, k_pos, window, q_chunk, scale):
+    """Gather only the (window + q_chunk) key slice per q block: O(S*W)."""
+    nq, b, kvh, g, cq, d = qg.shape
+    sk = k.shape[1]
+    span = min(window + q_chunk, sk)
+    kt = k.transpose(0, 2, 1, 3)  # (B, KV, Sk, D)
+    vt = v.transpose(0, 2, 1, 3)
+
+    def q_body(_, q_xs):
+        qi, q_blk, q_pos = q_xs
+        q_start = qi * q_chunk
+        k_start = jnp.clip(q_start + q_chunk - span, 0, max(sk - span, 0))
+        k_blk = jax.lax.dynamic_slice_in_dim(kt, k_start, span, axis=2)
+        v_blk = jax.lax.dynamic_slice_in_dim(vt, k_start, span, axis=2)
+        kp = jax.lax.dynamic_slice_in_dim(k_pos, k_start, span, axis=1)  # (B, span)
+        s = jnp.einsum("bkgqd,bkcd->bkgqc", q_blk, k_blk).astype(jnp.float32) * scale
+        mask = (q_pos[:, :, None] >= kp[:, None, :]) & (
+            q_pos[:, :, None] - kp[:, None, :] < window
+        )
+        s = jnp.where(mask[:, None, None], s, NEG_INF)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        p = jnp.exp(s - m)
+        l = jnp.sum(p, axis=-1, keepdims=True)
+        out = jnp.einsum("bkgqc,bkcd->bkgqd", (p / jnp.maximum(l, 1e-30)).astype(v_blk.dtype), v_blk)
+        return None, out
+
+    _, out = jax.lax.scan(q_body, None, (jnp.arange(nq), qg, qp))
+    return out
+
+
+def decode_attention(q, k_cache, v_cache, *, length, window: Optional[int] = None):
+    """Single-token attention against a cache.
+
+    q: (B, 1, H, D); k_cache/v_cache: (B, S, KV, D); length: scalar int —
+    number of valid cache entries (the cache may be a rolling window buffer,
+    in which case every slot < min(length, S) is valid).
+    """
+    b, _, h, d = q.shape
+    _, s, kvh, _ = k_cache.shape
+    g = h // kvh
+    scale = d ** -0.5
+    qg = q.reshape(b, kvh, g, d)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache).astype(jnp.float32) * scale
+    valid = jnp.arange(s) < jnp.minimum(length, s)
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", w.astype(v_cache.dtype), v_cache)
+    return out.reshape(b, 1, h, d)
+
+
+# ---------------------------------------------------------------------------
+# Full attention block forward
+# ---------------------------------------------------------------------------
+def attn_forward(
+    ctx: Ctx,
+    p,
+    x,
+    *,
+    positions,          # (B, S) int32 or (B, 3, S) for mrope
+    cache=None,         # dict(k, v, length) or None
+    cache_out_len: Optional[int] = None,  # prefill: emit a cache of this length
+):
+    cfg = ctx.cfg
+    dt = ctx.compute_dtype
+    b, s, _ = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+
+    q = jnp.einsum("bsd,de->bse", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,de->bse", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,de->bse", x, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kv, hd)
+    v = v.reshape(b, s, kv, hd)
+    if cfg.qk_norm:
+        q = _head_rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = _head_rmsnorm(k, p["k_norm"], cfg.norm_eps)
+
+    if cfg.mrope:
+        q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+        pos_scalar = positions[:, 0]  # temporal stream drives causality
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        pos_scalar = positions
+
+    q = ctx.constrain(q, "batch", "act_seq", "heads", "head_dim")
+    k = ctx.constrain(k, "batch", "act_seq", "kv_heads", "head_dim")
+    v = ctx.constrain(v, "batch", "act_seq", "kv_heads", "head_dim")
+
+    new_cache = None
+    if ctx.mode == "decode":
+        assert cache is not None
+        idx = cache["length"]  # scalar int32: tokens already in cache
+        cache_len = cache["k"].shape[1]
+        # rolling-window write position (== idx for full caches)
+        wpos = jnp.mod(idx, cache_len)
+        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, wpos, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, wpos, axis=1)
+        k_cache = ctx.constrain(k_cache, "cache_batch", "cache_seq", "cache_kv", "cache_dim")
+        v_cache = ctx.constrain(v_cache, "cache_batch", "cache_seq", "cache_kv", "cache_dim")
+        out = decode_attention(q, k_cache, v_cache, length=idx + 1, window=cfg.attn_window)
+        new_cache = {"k": k_cache, "v": v_cache, "length": idx + 1}
+    else:
+        out = chunked_attention(
+            q, k, v, pos_scalar,
+            window=cfg.attn_window,
+            q_chunk=cfg.attn_chunk,
+            k_chunk=cfg.attn_chunk,
+        )
+        if cache_out_len is not None:
+            keep = min(cache_out_len, s)
+            k_keep = jax.lax.slice_in_dim(k, s - keep, s, axis=1)
+            v_keep = jax.lax.slice_in_dim(v, s - keep, s, axis=1)
+            if keep < cache_out_len:
+                pad = [(0, 0), (0, cache_out_len - keep), (0, 0), (0, 0)]
+                k_keep = jnp.pad(k_keep, pad)
+                v_keep = jnp.pad(v_keep, pad)
+            new_cache = {
+                "k": ctx.constrain(k_keep, "cache_batch", "cache_seq", "cache_kv", "cache_dim"),
+                "v": ctx.constrain(v_keep, "cache_batch", "cache_seq", "cache_kv", "cache_dim"),
+                "length": jnp.asarray(s, jnp.int32),
+            }
+
+    out = ctx.constrain(out, "batch", "act_seq", "heads", "head_dim")
+    y = jnp.einsum("bse,ed->bsd", out.reshape(b, s, h * hd), p["wo"].astype(dt))
+    return y, new_cache

@@ -1,0 +1,126 @@
+"""Shared layers: norms, embeddings, RoPE / M-RoPE, forward context."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.params import ParamSpec
+from repro.sharding.rules import ShardingRules
+
+
+# ---------------------------------------------------------------------------
+# Forward context: carries config + sharding rules so layers can place
+# sharding constraints.  rules=None (smoke tests / single device) is a no-op.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Ctx:
+    cfg: ModelConfig
+    rules: Optional[ShardingRules] = None
+    mode: str = "train"  # train | prefill | decode
+
+    @property
+    def compute_dtype(self):
+        return jnp.dtype(self.cfg.compute_dtype)
+
+    def constrain(self, x, *logical_axes):
+        if self.rules is None:
+            return x
+        # NOTE: constraints are intentionally NOT divisibility-fitted.  A
+        # forced non-divisible constraint costs a padded reshard ("involuntary
+        # full rematerialization" warning), but *dropping* it lets GSPMD pick
+        # far worse layouts for odd head counts (musicgen kv=24, yi-34b H=56:
+        # up to 10x regressions) — measured in EXPERIMENTS.md §Perf it.1/it.6.
+        return jax.lax.with_sharding_constraint(x, self.rules.spec(logical_axes))
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+def rmsnorm_specs(d: int) -> dict:
+    return {"scale": ParamSpec((d,), ("act_embed",), init="ones")}
+
+
+def rmsnorm(p, x, eps: float):
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding + output head
+# ---------------------------------------------------------------------------
+def embed_specs(cfg: ModelConfig) -> dict:
+    out = {}
+    if cfg.embed_inputs:
+        out["tok"] = ParamSpec(
+            (cfg.vocab_size, cfg.d_model), ("vocab", "embed"), init="normal", stddev=1.0
+        )
+    if not cfg.tie_embeddings:
+        out["out"] = ParamSpec(
+            (cfg.d_model, cfg.vocab_size), ("embed", "vocab"), init="normal",
+            stddev=cfg.d_model ** -0.5,
+        )
+    return out
+
+
+def embed_tokens(ctx: Ctx, p, tokens):
+    emb = p["tok"].astype(ctx.compute_dtype)
+    x = jnp.take(emb, tokens, axis=0)
+    return ctx.constrain(x, "batch", "act_seq", "act_embed")
+
+
+def output_weights(cfg: ModelConfig, embed_params):
+    if cfg.tie_embeddings:
+        return embed_params["tok"].T  # (d, vocab)
+    return embed_params["out"]
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, D); positions: broadcastable to (..., S) int32."""
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)  # (half,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta: float, sections):
+    """M-RoPE (Qwen2-VL): frequency channels split over (t, h, w) position ids.
+
+    x: (B, S, H, D); positions3: (B, 3, S) int32; sections sums to D//2.
+    """
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(x.shape[-1], theta)  # (half,)
+    # angles per position stream: (B, 3, S, half)
+    angles_all = positions3[..., None].astype(jnp.float32) * freqs
+    # select which stream drives each frequency channel
+    sec_id = jnp.repeat(
+        jnp.arange(3), jnp.asarray(sections), total_repeat_length=half
+    )  # (half,)
+    angles = jnp.transpose(angles_all, (0, 2, 3, 1))  # (B, S, half, 3)
+    angles = jnp.sum(angles * jax.nn.one_hot(sec_id, 3, dtype=jnp.float32), axis=-1)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)

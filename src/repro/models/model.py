@@ -1,0 +1,224 @@
+"""Top-level model: segment-scanned decoder with train / prefill / decode paths.
+
+Layers are grouped into *segments*: the repeating ``layer_pattern`` unit is
+stacked ``n_repeat`` times and driven by ``jax.lax.scan`` (one compiled body
+per segment — essential to keep HLO size and CPU compile time bounded for the
+512-device dry-run).  A trailing remainder (e.g. recurrentgemma's 38 = 12x3+2)
+forms a second, shorter segment.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.blocks import block_apply, block_cache_specs, block_specs
+from repro.models.config import ModelConfig
+from repro.models.layers import Ctx, embed_specs, embed_tokens, output_weights, rmsnorm, rmsnorm_specs
+from repro.models.params import ParamSpec, tree_map_specs
+
+
+# ---------------------------------------------------------------------------
+# Segments
+# ---------------------------------------------------------------------------
+def build_segments(cfg: ModelConfig) -> list[tuple[tuple[str, ...], int]]:
+    pattern = tuple(cfg.layer_pattern)
+    m = len(pattern)
+    full, rem = divmod(cfg.num_layers, m)
+    segs: list[tuple[tuple[str, ...], int]] = []
+    if full:
+        segs.append((pattern, full))
+    if rem:
+        segs.append((pattern[:rem], 1))
+    return segs
+
+
+def _stack_specs(specs: dict, n: int) -> dict:
+    return tree_map_specs(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.axes, s.dtype, s.init, s.stddev),
+        specs,
+    )
+
+
+def model_specs(cfg: ModelConfig, serve: bool = False) -> dict:
+    segments = []
+    for pattern, n in build_segments(cfg):
+        seg = {
+            f"pos{i}": _stack_specs(block_specs(cfg, kind, serve=serve), n)
+            for i, kind in enumerate(pattern)
+        }
+        segments.append(seg)
+    return {
+        "embed": embed_specs(cfg),
+        "segments": segments,
+        "final_norm": rmsnorm_specs(cfg.d_model),
+    }
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
+    segments = []
+    for pattern, n in build_segments(cfg):
+        seg = {
+            f"pos{i}": _stack_specs(block_cache_specs(cfg, kind, batch, seq_len), n)
+            for i, kind in enumerate(pattern)
+        }
+        segments.append(seg)
+    return {
+        "length": ParamSpec((), (), dtype=jnp.int32, init="zeros"),
+        "segments": segments,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Backbone forward
+# ---------------------------------------------------------------------------
+def _segment_forward(ctx: Ctx, pattern, seg_params, x, *, positions, length, seg_cache, emit_cache):
+    cfg = ctx.cfg
+
+    def body(x_carry, xs):
+        layer_p, layer_c = xs
+        new_c = {}
+        aux_total = jnp.zeros((), jnp.float32)
+        for i, kind in enumerate(pattern):
+            c = layer_c[f"pos{i}"] if layer_c is not None else None
+            x_carry, nc, aux = block_apply(
+                ctx, kind, layer_p[f"pos{i}"], x_carry,
+                positions=positions, length=length, cache=c, emit_cache=emit_cache,
+            )
+            if nc is not None:
+                new_c[f"pos{i}"] = nc
+            aux_total = aux_total + aux
+        x_carry = ctx.constrain(x_carry, "batch", "act_seq_sp", "act_embed")
+        return x_carry, (new_c, aux_total)
+
+    if cfg.remat and ctx.mode == "train":
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    xs = (seg_params, seg_cache)
+    x, (new_cache, aux) = jax.lax.scan(body, x, xs)
+    if not new_cache:
+        new_cache = None
+    return x, new_cache, jnp.sum(aux)
+
+
+def forward(
+    ctx: Ctx,
+    params: dict,
+    inputs: dict,
+    *,
+    cache: Optional[dict] = None,
+    emit_cache: bool = False,
+):
+    """inputs: {"tokens": (B,S)} or {"embeddings": (B,S,d)}; optional
+    {"positions": (B,S) or (B,3,S)}.  Returns (hidden (B,S,d), new_cache, aux)."""
+    cfg = ctx.cfg
+    dt = ctx.compute_dtype
+
+    if cfg.embed_inputs:
+        x = embed_tokens(ctx, params["embed"], inputs["tokens"])
+        if cfg.family == "hybrid":  # gemma-style embedding scale
+            x = x * jnp.asarray(cfg.d_model ** 0.5, dt)
+        b, s = inputs["tokens"].shape
+    else:
+        x = inputs["embeddings"].astype(dt)
+        x = ctx.constrain(x, "batch", "act_seq", "act_embed")
+        b, s = x.shape[0], x.shape[1]
+
+    length = cache["length"] if cache is not None else None
+    if "positions" in inputs:
+        positions = inputs["positions"]
+    elif ctx.mode == "decode":
+        pos = length[None] if length.ndim == 0 else length
+        positions = jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32)
+        if cfg.mrope:
+            positions = jnp.broadcast_to(positions[:, None, :], (b, 3, 1))
+    else:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        if cfg.mrope:
+            positions = jnp.broadcast_to(positions[:, None, :], (b, 3, s))
+
+    new_segments = []
+    aux_total = jnp.zeros((), jnp.float32)
+    for seg_idx, (pattern, n) in enumerate(build_segments(cfg)):
+        seg_params = params["segments"][seg_idx]
+        seg_cache = cache["segments"][seg_idx] if cache is not None else None
+        x, new_seg, aux = _segment_forward(
+            ctx, pattern, seg_params, x,
+            positions=positions, length=length, seg_cache=seg_cache, emit_cache=emit_cache,
+        )
+        new_segments.append(new_seg)
+        aux_total = aux_total + aux
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+
+    new_cache = None
+    if any(s is not None for s in new_segments):
+        new_len = (length + s) if length is not None else jnp.asarray(s, jnp.int32)
+        new_cache = {"length": new_len, "segments": new_segments}
+    return x, new_cache, aux_total
+
+
+# ---------------------------------------------------------------------------
+# Losses / heads
+# ---------------------------------------------------------------------------
+def chunked_ce_loss(ctx: Ctx, x, w_out, labels, mask=None):
+    """Fused lm-head + cross-entropy, scanned over sequence chunks so the
+    (B, chunk, V) logits buffer stays bounded and vocab-sharded."""
+    cfg = ctx.cfg
+    b, s, d = x.shape
+    chunk = min(cfg.loss_chunk, s)
+    nc = s // chunk
+    assert s % chunk == 0, (s, chunk)
+    if mask is None:
+        mask = jnp.ones((b, s), jnp.float32)
+
+    xc = x.reshape(b, nc, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, nc, chunk).transpose(1, 0, 2)
+    mc = mask.reshape(b, nc, chunk).transpose(1, 0, 2)
+    w = w_out.astype(ctx.compute_dtype)
+
+    def body(carry, xs):
+        x_blk, l_blk, m_blk = xs
+        logits = jnp.einsum("bcd,dv->bcv", x_blk, w)
+        logits = ctx.constrain(logits, "batch", None, "vocab").astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, l_blk[..., None], axis=-1)[..., 0]
+        nll = (lse - tgt) * m_blk
+        return (carry[0] + nll.sum(), carry[1] + m_blk.sum()), None
+
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    (total, denom), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())), (xc, lc, mc))
+    return total / jnp.maximum(denom, 1.0)
+
+
+def logits_last(ctx: Ctx, x_last, w_out):
+    """x_last: (B, 1, d) -> (B, V) float32 logits."""
+    logits = jnp.einsum("bod,dv->bov", x_last, w_out.astype(ctx.compute_dtype))
+    return ctx.constrain(logits[:, 0], "batch", "vocab").astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+def loss_fn(ctx: Ctx, params, batch, aux_weight: float = 0.01):
+    x, _, aux = forward(ctx, params, batch)
+    w_out = output_weights(ctx.cfg, params["embed"])
+    ce = chunked_ce_loss(ctx, x, w_out, batch["labels"], batch.get("mask"))
+    return ce + aux_weight * aux, {"ce": ce, "aux": aux}
+
+
+def prefill(ctx: Ctx, params, batch):
+    ctx = dataclasses.replace(ctx, mode="prefill")
+    x, cache, _ = forward(ctx, params, batch, emit_cache=True)
+    w_out = output_weights(ctx.cfg, params["embed"])
+    return logits_last(ctx, x[:, -1:], w_out), cache
+
+
+def decode_step(ctx: Ctx, params, cache, batch):
+    ctx = dataclasses.replace(ctx, mode="decode")
+    x, new_cache, _ = forward(ctx, params, batch, cache=cache)
+    w_out = output_weights(ctx.cfg, params["embed"])
+    return logits_last(ctx, x, w_out), new_cache

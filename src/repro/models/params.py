@@ -1,0 +1,94 @@
+"""Parameter-spec system: declare params as specs, materialize lazily.
+
+A model is described by a pytree of :class:`ParamSpec`.  From the same tree we
+derive (a) real initialized arrays for smoke tests / small-scale training,
+(b) ``jax.ShapeDtypeStruct`` stand-ins for the multi-pod dry-run (zero
+allocation), and (c) ``NamedSharding`` trees from logical axis names.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding.rules import ShardingRules
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[Optional[str], ...]
+    dtype: Any = jnp.float32
+    init: str = "normal"      # normal | zeros | ones | embed
+    stddev: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_map_specs(fn, tree):
+    return jax.tree_util.tree_map(fn, tree, is_leaf=is_spec)
+
+
+def _eff_dtype(spec, dtype_override):
+    """dtype_override applies to float leaves only (int8 quantized weights
+    and int32 state keep their storage dtype)."""
+    if dtype_override is not None and jnp.issubdtype(spec.dtype, jnp.floating):
+        return dtype_override
+    return spec.dtype
+
+
+def shape_dtypes(tree, dtype_override=None, shardings=None):
+    """ShapeDtypeStruct tree (optionally with attached shardings)."""
+    if shardings is None:
+        return tree_map_specs(
+            lambda s: jax.ShapeDtypeStruct(s.shape, _eff_dtype(s, dtype_override)), tree
+        )
+    return jax.tree_util.tree_map(
+        lambda s, sh: jax.ShapeDtypeStruct(
+            s.shape, _eff_dtype(s, dtype_override), sharding=sh
+        ),
+        tree,
+        shardings,
+        is_leaf=is_spec,
+    )
+
+
+def shardings(tree, mesh, rules: ShardingRules):
+    return tree_map_specs(lambda s: rules.fitted_sharding(mesh, s.axes, s.shape), tree)
+
+
+def specs_pspec(tree, rules: ShardingRules):
+    return tree_map_specs(lambda s: rules.spec(s.axes), tree)
+
+
+def init_params(tree, rng, dtype_override=None):
+    """Materialize real arrays (smoke tests, examples, small training runs)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree, is_leaf=is_spec)
+    rngs = jax.random.split(rng, len(leaves))
+    out = []
+    for spec, key in zip(leaves, rngs):
+        dtype = _eff_dtype(spec, dtype_override)
+        if spec.init == "zeros":
+            arr = jnp.zeros(spec.shape, dtype)
+        elif spec.init == "ones":
+            arr = jnp.ones(spec.shape, dtype)
+        else:
+            arr = (jax.random.normal(key, spec.shape, jnp.float32) * spec.stddev).astype(dtype)
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def count_params(tree) -> int:
+    return sum(int(np.prod(s.shape)) for s in jax.tree_util.tree_leaves(tree, is_leaf=is_spec))
+
+
+def fan_in_normal(shape: Sequence[int], fan_in: int) -> ParamSpec:
+    raise NotImplementedError  # placeholder guard; builders construct ParamSpec directly

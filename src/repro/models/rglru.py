@@ -1,0 +1,142 @@
+"""RG-LRU recurrent mixer (RecurrentGemma / Griffin recurrent block).
+
+Block structure (Griffin):
+  x -> [linear -> temporal conv -> RG-LRU]  (recurrent branch)
+    -> [linear -> GeLU]                      (gate branch)
+  out = W_out (branch_rec * branch_gate)
+
+RG-LRU recurrence (per channel):
+  r_t = sigmoid(W_a x_t),  i_t = sigmoid(W_x x_t)
+  a_t = exp(-c * softplus(Lambda) * r_t)
+  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import Ctx
+from repro.models.params import ParamSpec
+
+_C = 8.0  # RG-LRU decay temperature (Griffin)
+
+
+def rglru_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    w = cfg.lru_width
+    cw = cfg.rglru.conv_width
+    s_in = d ** -0.5
+    return {
+        "w_rec_in": ParamSpec((d, w), ("embed", "rglru_width"), stddev=s_in),
+        "w_gate_in": ParamSpec((d, w), ("embed", "rglru_width"), stddev=s_in),
+        "conv_w": ParamSpec((cw, w), ("conv", "rglru_width"), stddev=cw ** -0.5),
+        "conv_b": ParamSpec((w,), ("rglru_width",), init="zeros"),
+        "w_a": ParamSpec((w, w), ("rglru_width", None), stddev=w ** -0.5),
+        "b_a": ParamSpec((w,), ("rglru_width",), init="zeros"),
+        "w_x": ParamSpec((w, w), ("rglru_width", None), stddev=w ** -0.5),
+        "b_x": ParamSpec((w,), ("rglru_width",), init="zeros"),
+        "lambda_p": ParamSpec((w,), ("rglru_width",), init="ones"),
+        "w_out": ParamSpec(
+            (w, d), ("rglru_width", "embed"),
+            stddev=w ** -0.5 / math.sqrt(2 * cfg.num_layers),
+        ),
+    }
+
+
+def rglru_scan_ref(x, rgate, igate, log_a_base, h0=None, chunk: int = 1):
+    """RG-LRU scan with an optional chunked-unrolled time loop (default 1 —
+    chunk unrolling measured slower on the XLA path, see
+    ssm.selective_scan_ref; the Pallas kernel repro.kernels.rglru is the
+    TPU performance path).  Padded steps have r = 0 => a = 1, i*x = 0 =>
+    h preserved.
+
+    x, rgate, igate: (B, S, W) f32; log_a_base: (W,) = -c*softplus(Lambda) < 0.
+    Returns y: (B, S, W), h_final: (B, W).
+    """
+    b, s, w = x.shape
+    if h0 is None:
+        h0 = jnp.zeros((b, w), jnp.float32)
+
+    chunk = max(1, min(chunk, s))
+    pad = (-s) % chunk
+    if pad:
+        zpad = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        x, rgate, igate = map(zpad, (x, rgate, igate))
+    sp = s + pad
+    nc = sp // chunk
+
+    def to_chunks(a):
+        return jnp.moveaxis(a.astype(jnp.float32).reshape(b, nc, chunk, w), 1, 0)
+
+    xs = tuple(to_chunks(a) for a in (x, rgate, igate))
+
+    def chunk_body(h, inp):
+        x_c, r_c, i_c = inp
+        ys = []
+        for t in range(chunk):  # unrolled
+            a = jnp.exp(log_a_base[None] * r_c[:, t])
+            h = a * h + jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12)) * (
+                i_c[:, t] * x_c[:, t]
+            )
+            ys.append(h)
+        return h, jnp.stack(ys, axis=1)
+
+    h_final, ys = jax.lax.scan(chunk_body, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, sp, w)
+    return y[:, :s], h_final
+
+
+def _causal_conv(x, w, b, state=None):
+    k = w.shape[0]
+    if state is None:
+        x_pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        x_pad = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(
+        x_pad[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k)
+    )
+    new_state = x_pad[:, -(k - 1) :, :] if k > 1 else None
+    return out + b[None, None, :], new_state
+
+
+def rglru_forward(ctx: Ctx, p, x, *, cache=None):
+    """cache: {"conv": (B, K-1, W), "h": (B, W), "length"} for decode."""
+    cfg = ctx.cfg
+    dt = ctx.compute_dtype
+
+    rec = jnp.einsum("bsd,dw->bsw", x, p["w_rec_in"].astype(dt))
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_gate_in"].astype(dt)))
+    rec = ctx.constrain(rec, "batch", "act_seq", "rglru_width")
+
+    conv_state = cache["conv"] if cache is not None else None
+    rec, new_conv = _causal_conv(rec, p["conv_w"].astype(dt), p["conv_b"].astype(dt), conv_state)
+
+    rgate = jax.nn.sigmoid(
+        jnp.einsum("bsw,wv->bsv", rec, p["w_a"].astype(dt)).astype(jnp.float32)
+        + p["b_a"].astype(jnp.float32)
+    )
+    igate = jax.nn.sigmoid(
+        jnp.einsum("bsw,wv->bsv", rec, p["w_x"].astype(dt)).astype(jnp.float32)
+        + p["b_x"].astype(jnp.float32)
+    )
+    log_a_base = -_C * jax.nn.softplus(p["lambda_p"].astype(jnp.float32))
+
+    h0 = cache["h"] if cache is not None else None
+    y, h_final = rglru_scan_ref(rec.astype(jnp.float32), rgate, igate, log_a_base, h0)
+    y = y.astype(dt) * gate
+    y = ctx.constrain(y, "batch", "act_seq", "rglru_width")
+    out = jnp.einsum("bsw,wd->bsd", y, p["w_out"].astype(dt))
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv, "h": h_final, "length": cache["length"] + x.shape[1]}
+    elif ctx.mode == "prefill":
+        new_cache = {
+            "conv": new_conv,
+            "h": h_final,
+            "length": jnp.asarray(x.shape[1], jnp.int32),
+        }
+    return out, new_cache

@@ -1,0 +1,145 @@
+"""Mamba-1 selective SSM mixer (falcon-mamba-7b).
+
+The XLA path uses a sequential ``lax.scan`` over time (numerically exact, one
+compiled body regardless of sequence length); the TPU performance path is the
+blocked Pallas kernel in ``repro.kernels.mamba_scan`` which carries state
+across VMEM time tiles.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import Ctx
+from repro.models.params import ParamSpec
+
+
+def ssm_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di = cfg.d_inner
+    r = cfg.dt_rank
+    st = cfg.ssm.d_state
+    cw = cfg.ssm.d_conv
+    s_in = d ** -0.5
+    return {
+        "in_proj": ParamSpec((d, 2 * di), ("embed", "inner"), stddev=s_in),
+        "conv_w": ParamSpec((cw, di), ("conv", "inner"), stddev=cw ** -0.5),
+        "conv_b": ParamSpec((di,), ("inner",), init="zeros"),
+        "x_proj": ParamSpec((di, r + 2 * st), ("inner", None), stddev=di ** -0.5),
+        "dt_proj": ParamSpec((r, di), ("dt_rank", "inner"), stddev=r ** -0.5),
+        "dt_bias": ParamSpec((di,), ("inner",), init="zeros"),
+        "A_log": ParamSpec((di, st), ("inner", "state"), init="zeros"),
+        "D": ParamSpec((di,), ("inner",), init="ones"),
+        "out_proj": ParamSpec(
+            (di, d), ("inner", "embed"),
+            stddev=di ** -0.5 / math.sqrt(2 * cfg.num_layers),
+        ),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv. x: (B,S,C); w: (K,C); state: (B,K-1,C) or None."""
+    k = w.shape[0]
+    if state is None:
+        x_pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        x_pad = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(
+        x_pad[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k)
+    )
+    new_state = x_pad[:, -(k - 1) :, :] if k > 1 else None
+    return out + b[None, None, :], new_state
+
+
+def selective_scan_ref(x, dt, Bmat, Cmat, A, D, h0=None, chunk: int = 1):
+    """Selective scan with an optional chunked-unrolled time loop.
+
+    NOTE (EXPERIMENTS.md §Perf iteration 4, REFUTED): unrolling chunks does
+    NOT cut HBM traffic on the XLA path — the per-step y_t = C·h reduction
+    breaks the elementwise fusion chain, so the state materializes every
+    step regardless (measured +31% from stacking overhead at chunk=16).
+    Default is therefore chunk=1 (plain scan); the real fix is the Pallas
+    kernel (repro.kernels.mamba_scan) whose VMEM-resident state makes the
+    scan traffic = stream inputs/outputs once per layer.
+
+    x, dt: (B, S, Di); Bmat, Cmat: (B, S, N); A: (Di, N); D: (Di,).
+    Returns y: (B, S, Di) f32, h_final: (B, Di, N) f32.
+    """
+    b, s, di = x.shape
+    n = A.shape[1]
+    if h0 is None:
+        h0 = jnp.zeros((b, di, n), jnp.float32)
+
+    chunk = max(1, min(chunk, s))
+    pad = (-s) % chunk
+    if pad:
+        zpad = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        x, dt, Bmat, Cmat = map(zpad, (x, dt, Bmat, Cmat))
+    sp = s + pad
+    nc = sp // chunk
+
+    def to_chunks(a):
+        return jnp.moveaxis(
+            a.astype(jnp.float32).reshape(b, nc, chunk, -1), 1, 0
+        )  # (nc, B, chunk, F)
+
+    xs = tuple(to_chunks(a) for a in (x, dt, Bmat, Cmat))
+
+    def chunk_body(h, inp):
+        x_c, dt_c, b_c, c_c = inp
+        ys = []
+        for t in range(chunk):  # unrolled: intermediates stay fused
+            da = jnp.exp(dt_c[:, t, :, None] * A[None])
+            dbx = dt_c[:, t, :, None] * b_c[:, t, None, :] * x_c[:, t, :, None]
+            h = da * h + dbx
+            ys.append(jnp.einsum("bdn,bn->bd", h, c_c[:, t]) + D[None] * x_c[:, t])
+        return h, jnp.stack(ys, axis=1)  # (B, chunk, Di)
+
+    h_final, ys = jax.lax.scan(chunk_body, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, sp, di)
+    return y[:, :s], h_final
+
+
+def ssm_forward(ctx: Ctx, p, x, *, cache=None):
+    """cache: {"conv": (B, K-1, Di), "h": (B, Di, N), "length"} for decode."""
+    cfg = ctx.cfg
+    dt_ = ctx.compute_dtype
+    di = cfg.d_inner
+    r = cfg.dt_rank
+    n = cfg.ssm.d_state
+
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(dt_))
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs = ctx.constrain(xs, "batch", "act_seq", "inner")
+
+    conv_state = cache["conv"] if cache is not None else None
+    xs, new_conv = _causal_conv(xs, p["conv_w"].astype(dt_), p["conv_b"].astype(dt_), conv_state)
+    xs = jax.nn.silu(xs)
+
+    proj = jnp.einsum("bse,ef->bsf", xs, p["x_proj"].astype(dt_))
+    dt_raw, Bmat, Cmat = jnp.split(proj, [r, r + n], axis=-1)
+    dt_full = jax.nn.softplus(
+        jnp.einsum("bsr,re->bse", dt_raw, p["dt_proj"].astype(dt_)).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32)
+    )
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    h0 = cache["h"] if cache is not None else None
+    y, h_final = selective_scan_ref(xs, dt_full, Bmat, Cmat, A, p["D"].astype(jnp.float32), h0)
+    y = y.astype(dt_) * jax.nn.silu(z)
+    y = ctx.constrain(y, "batch", "act_seq", "inner")
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(dt_))
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv, "h": h_final, "length": cache["length"] + x.shape[1]}
+    elif ctx.mode == "prefill":
+        new_cache = {
+            "conv": new_conv,
+            "h": h_final,
+            "length": jnp.asarray(x.shape[1], jnp.int32),
+        }
+    return out, new_cache

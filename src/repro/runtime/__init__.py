@@ -1,0 +1,2 @@
+from repro.runtime.cluster import ClusterSim, FailureInjector, elastic_remesh  # noqa: F401
+from repro.runtime.straggler import hedged_dispatch, p99  # noqa: F401

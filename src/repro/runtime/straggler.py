@@ -1,0 +1,32 @@
+"""Straggler mitigation: hedged dispatch for serving pools.
+
+A segment is sent to the least-loaded server; if its latency estimate
+exceeds the hedge deadline (q-th percentile of recent completions), a backup
+copy is dispatched to the next pool and the first finisher wins — the
+standard tail-at-scale recipe, applied at the R2E-VID scheduler level.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def p99(samples):
+    return float(np.percentile(np.asarray(samples), 99))
+
+
+def hedged_dispatch(latencies, *, hedge_quantile: float = 0.9, hedge_cost: float = 0.05,
+                    rng=None):
+    """latencies: (n_tasks, n_replicas) latency draws per task per replica.
+
+    Returns realized per-task latency with hedging: the primary replica is
+    used unless its draw exceeds the hedge deadline, in which case the task
+    also runs on a backup and takes min(primary, deadline + backup).
+    """
+    lat = np.asarray(latencies, np.float64)
+    primary = lat[:, 0]
+    deadline = np.quantile(primary, hedge_quantile)
+    if lat.shape[1] < 2:
+        return primary
+    backup = lat[:, 1] + deadline + hedge_cost
+    hedged = np.where(primary > deadline, np.minimum(primary, backup), primary)
+    return hedged

@@ -1,0 +1,2 @@
+from repro.serving.simulator import SimConfig, Simulator  # noqa: F401
+from repro.serving.baselines import BASELINES, make_method  # noqa: F401

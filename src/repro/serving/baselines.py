@@ -1,0 +1,188 @@
+"""Baseline methods (paper §4.1.1) + the R2E-VID method adapter.
+
+  A²     [Jiang+ RTSS'21] — cloud-only joint model-and-data adaptation:
+         minimizes nominal cost over (r, p, v) with y ≡ cloud.
+  JCAB   [Wang+ INFOCOM'20] — edge-cloud joint configuration adaptation and
+         bandwidth allocation; nominal (non-robust), single mid model ladder
+         position per tier unless infeasible.
+  RDAP   [Su+ 2022] — prediction-based deployment: plans against an EMA
+         difficulty forecast ẑ (stale under content shift), nominal cost.
+  Sniper [Liu+ DAC'22] — similarity-aware scheduling: reuses the config of
+         the most similar previously-profiled task (cheap, but drifts).
+  R2EVID — ours: temporal gate warm-start + CCG robust selection +
+         temporal-consistency constraint + C6 bandwidth repair.
+
+Every method sees the same observables: (ẑ or z, A^q); none sees realized u.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.cost_model import SystemConfig, accuracy_table, cost_tables
+from repro.core.robust import RobustProblem, solve_ccg
+from repro.core.router import enforce_bandwidth
+
+
+def _nominal_tables(sys: SystemConfig, z):
+    """Joint (F = routes*res*fps, K) nominal cost + feasibility for tasks."""
+    c1, b2, _ = (np.asarray(t) for t in cost_tables(sys))
+    f = np.asarray(accuracy_table(sys, z))                 # (M, N, Z, K, 2)
+    feas = f >= 0  # placeholder; caller applies A_q
+    return c1, b2, f
+
+
+def _argmin_feasible(sys, z, aq, *, force_route=None, allowed_versions=None,
+                     margin=None):
+    """Vectorized nominal argmin over the decision lattice."""
+    c1, b2, f = _nominal_tables(sys, z)
+    m = z.shape[0]
+    if margin is None:
+        margin = sys.acc_margin_nominal
+    total = c1[None, :, :, None, :] + b2[None, :, :, :, :]
+    # total: (M, N, Z, K, 2) broadcast of (N,Z,2) + (N,Z,K,2)
+    feas = f >= (aq + margin)[:, None, None, None, None]
+    if force_route is not None:
+        mask_route = np.zeros((1, 1, 1, 1, 2), bool)
+        mask_route[..., force_route] = True
+        feas = feas & mask_route
+    if allowed_versions is not None:
+        mv = np.zeros((1, 1, 1, sys.num_versions, 1), bool)
+        mv[:, :, :, allowed_versions, :] = True
+        feas = feas & mv
+    big = 1e9
+    obj = np.where(feas, np.broadcast_to(total, feas.shape), big)
+    flat = obj.reshape(m, -1)
+    idx = flat.argmin(axis=1)
+    # fall back to max-accuracy config when nothing is feasible
+    none_ok = flat[np.arange(m), idx] >= big
+    if none_ok.any():
+        acc_flat = f.reshape(m, -1)
+        idx[none_ok] = acc_flat[none_ok].argmax(axis=1)
+    n, zz, k = sys.n_res, sys.n_fps, sys.num_versions
+    r, rem = np.divmod(idx, zz * k * 2)
+    p, rem = np.divmod(rem, k * 2)
+    v, route = np.divmod(rem, 2)
+    return {"route": route, "r": r, "p": p, "v": v}
+
+
+# ---------------------------------------------------------------------------
+def a2_cloud_only(sys: SystemConfig):
+    def method(rnd, state):
+        return _argmin_feasible(sys, rnd["z"], rnd["aq"], force_route=1)
+    return method
+
+
+def jcab(sys: SystemConfig):
+    mid = sys.num_versions // 2
+
+    def method(rnd, state):
+        # joint config + bandwidth allocation, single mid-ladder model;
+        # escalates version only when mid is infeasible everywhere
+        cfg = _argmin_feasible(sys, rnd["z"], rnd["aq"], allowed_versions=[mid])
+        f = np.asarray(accuracy_table(sys, rnd["z"]))
+        ok = f[np.arange(len(rnd["z"])), cfg["r"], cfg["p"], cfg["v"], cfg["route"]] >= rnd["aq"]
+        if (~ok).any():
+            esc = _argmin_feasible(sys, rnd["z"][~ok], rnd["aq"][~ok])
+            for k in cfg:
+                cfg[k][~ok] = esc[k]
+        return cfg
+    return method
+
+
+def rdap(sys: SystemConfig, ema: float = 0.7):
+    def method(rnd, state):
+        z_prev = state.get("z_ema")
+        z_hat = rnd["z"] if z_prev is None else ema * z_prev + (1 - ema) * rnd["z"]
+        # NOTE: plans against the *forecast*, reality uses rnd["z"]
+        state["z_ema"] = rnd["z"].copy()
+        return _argmin_feasible(sys, z_hat, rnd["aq"])
+    return method
+
+
+def sniper(sys: SystemConfig, n_profiles: int = 8):
+    def method(rnd, state):
+        profiles = state.get("profiles")  # (n, 2): z, aq -> config rows
+        cfg = _argmin_feasible(sys, rnd["z"], rnd["aq"])
+        if profiles is None:
+            state["profiles"] = {
+                "key": np.stack([rnd["z"], rnd["aq"]], 1)[:n_profiles],
+                "cfg": {k: v[:n_profiles].copy() for k, v in cfg.items()},
+            }
+            return cfg
+        # reuse most-similar profiled config (the similarity shortcut)
+        key = np.stack([rnd["z"], rnd["aq"]], 1)
+        d = ((key[:, None, :] - profiles["key"][None]) ** 2).sum(-1)
+        nn = d.argmin(1)
+        reused = {k: profiles["cfg"][k][nn] for k in cfg}
+        # profile refresh for badly matched tasks
+        far = d.min(1) > 0.02
+        for k in cfg:
+            reused[k][far] = cfg[k][far]
+        return reused
+    return method
+
+
+def r2evid(sys: SystemConfig, gate_cfg=None, gate_params=None, use_gate: bool = True,
+           use_stage1: bool = True, use_stage2: bool = True):
+    """Ours.  Ablations (§4.4):
+      use_stage1=False — no adaptive configuration/partitioning: static mid
+        (r, p), edge-pinned route; only the robust version selection remains.
+      use_stage2=False — no robust multi-model selection: Stage-1 adaptive
+        config but a fixed mid-ladder version, nominal planning.
+    """
+    prob = RobustProblem.build(sys)
+
+    def method(rnd, state):
+        z = jnp.asarray(rnd["z"])
+        aq = jnp.asarray(rnd["aq"])
+        m = len(rnd["z"])
+        if not use_stage1:
+            # static configuration, no edge-cloud partitioning
+            fixed_r = np.full(m, sys.n_res // 2)
+            fixed_p = np.full(m, sys.n_fps // 2)
+            f = np.asarray(accuracy_table(sys, rnd["z"]))
+            # robust version choice at the fixed config (worst-case u per v)
+            u = sys.u_dev * (0.6 + 0.4 * np.arange(sys.num_versions) / (sys.num_versions - 1))
+            _, b2, _ = (np.asarray(t) for t in cost_tables(sys))
+            cost_v = b2[fixed_r[0], fixed_p[0], :, 0] * (1 + u)
+            feas = f[np.arange(m), fixed_r, fixed_p, :, 0] >= rnd["aq"][:, None]
+            obj = np.where(feas, cost_v[None], 1e9)
+            v = obj.argmin(1)
+            bad = ~feas.any(1)
+            v[bad] = f[bad][:, fixed_r[0], fixed_p[0], :, 0].argmax(1)
+            return {"route": np.zeros(m, np.int64), "r": fixed_r, "p": fixed_p, "v": v}
+        if not use_stage2:
+            # adaptive config but single mid model, nominal planning
+            return _argmin_feasible(sys, rnd["z"], rnd["aq"],
+                                    allowed_versions=[sys.num_versions // 2])
+        sol = solve_ccg(prob, z, aq)
+        if use_gate:
+            # temporal consistency on routes vs previous round
+            prev = state.get("prev_route")
+            tau_proxy = jnp.asarray(rnd["z"])  # difficulty as gate proxy here
+            prev_tau = state.get("prev_tau")
+            if prev is not None:
+                allowed = jnp.abs(tau_proxy - prev_tau) * 4.0 >= 1.0
+                route = jnp.where(
+                    (sol["route"] != prev) & ~allowed, prev, sol["route"]
+                )
+                sol = dict(sol, route=route)
+            state["prev_route"] = np.asarray(sol["route"]).copy()
+            state["prev_tau"] = np.asarray(tau_proxy).copy()
+        sol2, _ = enforce_bandwidth(sys, sol, z, aq)
+        return {k: np.asarray(sol2[k]) for k in ("route", "r", "p", "v")}
+    return method
+
+
+BASELINES = {
+    "A2": a2_cloud_only,
+    "JCAB": jcab,
+    "RDAP": rdap,
+    "Sniper": sniper,
+    "R2E-VID": r2evid,
+}
+
+
+def make_method(name: str, sys: SystemConfig, **kw):
+    return BASELINES[name](sys, **kw)

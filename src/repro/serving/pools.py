@@ -1,0 +1,62 @@
+"""Model pools: the edge/cloud tiers as live JAX serving endpoints.
+
+A pool owns one model variant (params + jit'd prefill/decode) and a request
+queue; the R2E-VID router's (route, v) decision maps a segment's token
+workload to a pool.  At production scale each pool is a TP slice of the
+fleet; here pools run reduced variants on the host mesh so examples/tests
+exercise the real code path end-to-end.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import Ctx, cache_specs, decode_step, model_specs, prefill
+from repro.models.config import ModelConfig
+from repro.models.params import init_params
+
+
+@dataclasses.dataclass
+class PoolStats:
+    requests: int = 0
+    tokens: int = 0
+    busy_s: float = 0.0
+
+
+class ModelPool:
+    def __init__(self, cfg: ModelConfig, rng=None, name: str = "pool"):
+        self.cfg = cfg
+        self.name = name
+        self.ctx = Ctx(cfg=cfg)
+        if rng is None:
+            rng = jax.random.PRNGKey(0)
+        self.params = init_params(model_specs(cfg), rng)
+        self._prefill = jax.jit(lambda p, b: prefill(self.ctx, p, b))
+        self._decode = jax.jit(lambda p, c, b: decode_step(self.ctx, p, c, b))
+        self.stats = PoolStats()
+
+    def serve_segment(self, tokens, decode_tokens: int = 8):
+        """Prefill a token batch then decode a few tokens; returns text ids."""
+        t0 = time.perf_counter()
+        b, s = tokens.shape
+        logits, cache = self._prefill(self.params, {"tokens": tokens})
+        out = [jnp.argmax(logits, axis=-1)]
+        for _ in range(decode_tokens - 1):
+            logits, cache = self._decode(self.params, cache, {"tokens": out[-1][:, None]})
+            out.append(jnp.argmax(logits, axis=-1))
+        jax.block_until_ready(out[-1])
+        self.stats.requests += b
+        self.stats.tokens += b * (s + decode_tokens)
+        self.stats.busy_s += time.perf_counter() - t0
+        return jnp.stack(out, axis=1)
+
+
+def make_tier_pools(edge_cfg: ModelConfig, cloud_cfg: ModelConfig):
+    return {
+        0: ModelPool(edge_cfg, jax.random.PRNGKey(1), name="edge"),
+        1: ModelPool(cloud_cfg, jax.random.PRNGKey(2), name="cloud"),
+    }

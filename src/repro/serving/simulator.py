@@ -1,0 +1,129 @@
+"""Round-based edge-cloud serving simulator (paper §4 evaluation substrate).
+
+Each round, M video-segment tasks arrive (difficulty z from the synthetic
+stream generator, accuracy requirements stable U[0.6,0.7] / fluctuating
+U[0.5,0.8]).  A method maps tasks -> (route, r, p, v); the simulator then
+realizes:
+
+  transmission : data(r,p) / (tier bandwidth x fluctuation), shared fairly
+  queueing     : tasks pack onto 4 edge servers / 1 cloud server,
+                 least-loaded-first (paper hardware: 4x Jetson NX + 1 Xeon)
+  compute      : version FLOPs / server throughput x adversarial-in-U jitter
+  energy       : tier power x compute time + tx power x transmission
+  accuracy     : accuracy_table(r, p, v, tier | z) + observation noise
+
+Methods only see ẑ (their own difficulty estimate) and A^q; the realized u
+(compute deviation) is drawn inside the Γ-budget uncertainty set — robust
+methods should degrade gracefully, nominal ones overshoot their SLA.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict
+
+import numpy as np
+
+from repro.core.cost_model import SystemConfig, accuracy_table, cost_tables
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    n_rounds: int = 20
+    n_tasks: int = 60
+    requirement: str = "stable"        # stable | fluctuating
+    bw_fluctuation: float = 0.0        # 0..0.3: bandwidth dips up to this frac
+    n_edge_servers: int = 4
+    n_cloud_servers: int = 1
+    seed: int = 0
+    adversarial_u: bool = True         # realize u at a worst-ish pole of U
+
+
+class Simulator:
+    def __init__(self, sys: SystemConfig, sim: SimConfig):
+        self.sys = sys
+        self.sim = sim
+        self.rng = np.random.default_rng(sim.seed)
+        self.c1, self.b2, self.bw_tab = (np.asarray(t) for t in cost_tables(sys))
+
+    # ------------------------------------------------------------------
+    def sample_round(self):
+        sim, rng = self.sim, self.rng
+        z = np.clip(rng.beta(2.0, 2.5, sim.n_tasks) * 1.2, 0.02, 1.0)
+        if sim.requirement == "stable":
+            aq = rng.uniform(0.6, 0.7, sim.n_tasks)
+        else:
+            aq = rng.uniform(0.5, 0.8, sim.n_tasks)
+        bw_mult = 1.0 - rng.uniform(0.0, sim.bw_fluctuation, 2)  # per tier
+        # realized compute deviation in U (Γ largest versions get hit)
+        u = np.zeros(self.sys.num_versions)
+        if sim.adversarial_u:
+            hit = rng.choice(self.sys.num_versions, self.sys.gamma, replace=False)
+            u[hit] = self.sys.u_dev * (0.6 + 0.4 * hit / (self.sys.num_versions - 1))
+        else:
+            u = rng.uniform(0, self.sys.u_dev, self.sys.num_versions)
+        return {"z": z.astype(np.float32), "aq": aq.astype(np.float32),
+                "bw_mult": bw_mult, "u": u}
+
+    # ------------------------------------------------------------------
+    def realize(self, rnd, cfg):
+        """cfg: dict(route, r, p, v) int arrays (M,). Returns per-task metrics."""
+        sys, sim = self.sys, self.sim
+        route = np.asarray(cfg["route"])
+        r, p, v = (np.asarray(cfg[k]) for k in ("r", "p", "v"))
+        m = route.shape[0]
+
+        # --- transmission: fair-share the tier uplink among its tasks
+        bw = np.array([sys.edge_bw_mbps, sys.cloud_bw_mbps]) * rnd["bw_mult"]
+        data_mbit = self.bw_tab[r, p, route]
+        t_trans = np.zeros(m)
+        for tier in (0, 1):
+            sel = route == tier
+            n = max(sel.sum(), 1)
+            share = bw[tier] / n
+            t_trans[sel] = data_mbit[sel] / np.maximum(share, 1e-6)
+
+        # --- compute + queueing: least-loaded-first packing
+        gf = np.zeros(m)
+        thr = np.array([sys.edge_gflops, sys.cloud_gflops])
+        fps = np.asarray(sys.fps_options, np.float32)
+        for i in range(m):
+            from repro.core.cost_model import version_flops
+            gf[i] = version_flops(sys, int(route[i]), int(v[i]),
+                                  int(sys.resolutions[r[i]])) * fps[p[i]] * sys.segment_sec
+        t_comp = gf / thr[route] * (1.0 + rnd["u"][v])
+        t_queue = np.zeros(m)
+        servers = {0: np.zeros(sim.n_edge_servers), 1: np.zeros(sim.n_cloud_servers)}
+        order = np.argsort(-t_comp)  # longest-first packing
+        for i in order:
+            q = servers[int(route[i])]
+            j = int(q.argmin())
+            t_queue[i] = q[j]
+            q[j] += t_comp[i]
+
+        delay = t_trans + t_queue + t_comp
+        power = np.array([sys.edge_power_w, sys.cloud_power_w])
+        energy = power[route] * t_comp + sys.transmit_power_w * t_trans
+        cost = delay + sys.beta * energy
+
+        acc_tab = np.asarray(accuracy_table(sys, rnd["z"]))
+        acc = acc_tab[np.arange(m), r, p, v, route]
+        acc = np.clip(acc + self.rng.normal(0, 0.008, m), 0, 1)
+        return {
+            "delay": delay, "energy": energy, "cost": cost, "accuracy": acc,
+            "success": (acc >= rnd["aq"] - 1e-6).astype(np.float32),
+            "route": route,
+        }
+
+    # ------------------------------------------------------------------
+    def run(self, method: Callable, n_rounds=None) -> Dict[str, float]:
+        """method(round_dict, sim_state) -> cfg dict.  Aggregates metrics."""
+        out = {k: [] for k in ("delay", "energy", "cost", "accuracy", "success", "cloud_frac")}
+        state = {}
+        for _ in range(n_rounds or self.sim.n_rounds):
+            rnd = self.sample_round()
+            cfg = method(rnd, state)
+            met = self.realize(rnd, cfg)
+            for k in ("delay", "energy", "cost", "accuracy", "success"):
+                out[k].append(met[k].mean())
+            out["cloud_frac"].append(met["route"].mean())
+        return {k: float(np.mean(vs)) for k, vs in out.items()}

@@ -1,0 +1,7 @@
+from repro.sharding.rules import (  # noqa: F401
+    ShardingRules,
+    make_rules,
+    logical_spec,
+    TRAIN_BASE,
+    SERVE_BASE,
+)

@@ -1,0 +1,179 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style).
+
+Every parameter / activation dimension carries a *logical* axis name; a
+``ShardingRules`` table maps logical names onto mesh axis names.  Rules differ
+between training (FSDP + TP + SP) and serving (TP + sequence-sharded KV), and
+architectures may override individual entries (e.g. mixtral decode shards
+expert weights over the data axis to fit HBM).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Optional, Sequence, Union
+
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[str, Sequence[str], None]
+
+# ---------------------------------------------------------------------------
+# Base tables.  "data" is the FSDP/DP axis; "model" is the TP/EP axis.  On a
+# multi-pod mesh the "pod" axis is prepended to every entry that contains
+# "data" (pure DP/FSDP scale-out across pods).
+# ---------------------------------------------------------------------------
+
+TRAIN_BASE: dict[str, Axis] = {
+    # activations
+    "batch": "data",
+    "act_seq": None,          # sequence dim inside blocks
+    "act_seq_sp": "model",    # sequence-parallel residual saves at layer edges
+    "act_embed": None,
+    # weights
+    "embed": "data",          # FSDP shard of the d_model dim of weights
+    "vocab": "model",
+    "heads": "model",
+    "heads_flat": "model",    # fused H*head_dim weight dim (always divisible)
+    "kv_heads": "model",
+    "head_dim": None,
+    "qk": None,
+    "mlp": "model",
+    "experts": "model",
+    "expert_in": "data",      # FSDP dim of expert weights
+    "expert_mlp": None,
+    "layers": None,           # scan dim (pipeline maps it to "pod")
+    # ssm / rglru
+    "inner": "model",
+    "state": None,
+    "conv": None,
+    "dt_rank": None,
+    "rglru_width": "model",
+    # kv cache
+    "cache_batch": "data",
+    "cache_seq": "model",
+    "cache_kv": None,
+    "cache_dim": None,
+}
+
+SERVE_BASE: dict[str, Axis] = dict(
+    TRAIN_BASE,
+    **{
+        "embed": None,        # no FSDP at serve time by default
+        "act_seq_sp": None,
+        "expert_in": None,
+        # decode caches: batch over data, seq over model (kv-head counts are
+        # rarely divisible by the TP degree).  GSPMD lowers the in-place
+        # dynamic-update-slice on the sharded seq dim to a predicated local
+        # update (no gather); decode attention computes sharded partial
+        # softmax stats + a small all-reduce.
+        "cache_seq": "model",
+        "cache_kv": None,
+    },
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    mapping: Mapping[str, Axis]
+    mesh_axes: tuple[str, ...]
+    mesh_sizes: Mapping[str, int] = dataclasses.field(default_factory=dict)
+
+    def axis(self, name: Optional[str]) -> Axis:
+        if name is None:
+            return None
+        if name not in self.mapping:
+            raise KeyError(f"unknown logical axis {name!r}")
+        ax = self.mapping[name]
+        return ax
+
+    def spec(self, logical_axes: Sequence[Optional[str]]) -> P:
+        used: set[str] = set()
+        parts = []
+        for name in logical_axes:
+            ax = self.axis(name)
+            if ax is None:
+                parts.append(None)
+                continue
+            axes = (ax,) if isinstance(ax, str) else tuple(ax)
+            axes = tuple(a for a in axes if a in self.mesh_axes and a not in used)
+            used.update(axes)
+            if not axes:
+                parts.append(None)
+            elif len(axes) == 1:
+                parts.append(axes[0])
+            else:
+                parts.append(axes)
+        return P(*parts)
+
+    def sharding(self, mesh: Mesh, logical_axes: Sequence[Optional[str]]) -> NamedSharding:
+        return NamedSharding(mesh, self.spec(logical_axes))
+
+    def fitted_spec(
+        self, logical_axes: Sequence[Optional[str]], shape: Sequence[int],
+        sizes: Optional[Mapping[str, int]] = None,
+    ) -> P:
+        """Like ``spec`` but drops mesh axes that don't divide the dim.
+
+        Used both for explicit input shardings (which REQUIRE divisibility)
+        and for in-graph sharding constraints: constraining e.g. kv=8 heads
+        onto a 16-way model axis makes GSPMD fall back to "involuntary full
+        rematerialization" (replicate + repartition) — a measured 10x+
+        collective/compute blowup on mixtral train (EXPERIMENTS.md §Perf).
+        """
+        sizes = sizes or self.mesh_sizes
+        spec = self.spec(logical_axes)
+        parts = []
+        for dim, entry in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+            if entry is None:
+                parts.append(None)
+                continue
+            axes = (entry,) if isinstance(entry, str) else tuple(entry)
+            while axes:
+                total = 1
+                for a in axes:
+                    total *= sizes.get(a, 1)
+                if dim % total == 0:
+                    break
+                axes = axes[:-1]
+            if not axes:
+                parts.append(None)
+            elif len(axes) == 1:
+                parts.append(axes[0])
+            else:
+                parts.append(axes)
+        return P(*parts)
+
+    def fitted_sharding(
+        self, mesh: Mesh, logical_axes: Sequence[Optional[str]], shape: Sequence[int]
+    ) -> NamedSharding:
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        return NamedSharding(mesh, self.fitted_spec(logical_axes, shape, sizes))
+
+
+def make_rules(
+    mesh: Mesh,
+    mode: str = "train",
+    overrides: Optional[Mapping[str, Axis]] = None,
+) -> ShardingRules:
+    """Build a rule table adapted to ``mesh`` (handles the optional pod axis)."""
+    base = dict(TRAIN_BASE if mode == "train" else SERVE_BASE)
+    if overrides:
+        base.update(overrides)
+    mesh_axes = tuple(mesh.axis_names)
+    multi_pod = "pod" in mesh_axes
+
+    def adapt(ax: Axis) -> Axis:
+        if ax is None:
+            return None
+        axes = (ax,) if isinstance(ax, str) else tuple(ax)
+        axes = tuple(a for a in axes if a in mesh_axes)
+        if multi_pod and "data" in axes and "pod" not in axes:
+            axes = ("pod",) + axes
+        if not axes:
+            return None
+        return axes[0] if len(axes) == 1 else axes
+
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return ShardingRules({k: adapt(v) for k, v in base.items()}, mesh_axes, sizes)
+
+
+def logical_spec(rules: ShardingRules, *logical_axes: Optional[str]) -> P:
+    return rules.spec(logical_axes)

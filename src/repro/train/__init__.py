@@ -1,0 +1,1 @@
+from repro.train.optimizer import AdamWConfig, AdamWState, init as adamw_init, update as adamw_update  # noqa: F401

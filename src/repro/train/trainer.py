@@ -1,0 +1,160 @@
+"""Training loop: sharded pjit steps, checkpoint/restart, failure recovery,
+optional int8 error-feedback gradient compression."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.models import Ctx, loss_fn, model_specs
+from repro.models.config import ModelConfig
+from repro.models.params import init_params, shardings as spec_shardings
+from repro.sharding.rules import ShardingRules
+from repro.train.compression import ef_compress_grads
+from repro.train.optimizer import AdamWConfig, AdamWState
+from repro.train import optimizer as _opt
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: str = "results/ckpt"
+    ckpt_keep: int = 3
+    log_every: int = 10
+    grad_compression: bool = False
+    grad_accum: int = 1   # microbatches per step (activation-memory knob)
+    opt: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+    seed: int = 0
+
+
+class NodeFailure(RuntimeError):
+    """Raised by the failure injector to simulate a node loss mid-run."""
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        tcfg: TrainConfig,
+        mesh=None,
+        rules: Optional[ShardingRules] = None,
+        failure_injector=None,
+    ):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.mesh = mesh
+        self.rules = rules
+        self.ckpt = CheckpointManager(tcfg.ckpt_dir, keep=tcfg.ckpt_keep)
+        self.failure_injector = failure_injector
+        self.specs = model_specs(cfg)
+        self.step = 0
+        self._build()
+
+    # ------------------------------------------------------------------
+    def _build(self):
+        ctx = Ctx(cfg=self.cfg, rules=self.rules, mode="train")
+        tcfg = self.tcfg
+
+        def grads_of(params, batch):
+            return jax.value_and_grad(
+                lambda p: loss_fn(ctx, p, batch), has_aux=True
+            )(params)
+
+        def train_step(params, opt_state, err_buf, batch):
+            if tcfg.grad_accum > 1:
+                # microbatch over the leading batch dim: activation memory
+                # scales with batch/grad_accum instead of batch
+                def split(x):
+                    b = x.shape[0]
+                    m = tcfg.grad_accum
+                    assert b % m == 0, (b, m)
+                    return x.reshape(m, b // m, *x.shape[1:])
+
+                micro = {k: split(v) for k, v in batch.items()}
+
+                def body(carry, mb):
+                    acc, loss_acc = carry
+                    (loss, _), g = grads_of(params, mb)
+                    acc = jax.tree_util.tree_map(jnp.add, acc, g)
+                    return (acc, loss_acc + loss), None
+
+                zeros = jax.tree_util.tree_map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params
+                )
+                (gsum, loss_sum), _ = jax.lax.scan(body, (zeros, 0.0), micro)
+                grads = jax.tree_util.tree_map(lambda g: g / tcfg.grad_accum, gsum)
+                loss = loss_sum / tcfg.grad_accum
+                metrics = {}
+            else:
+                (loss, metrics), grads = grads_of(params, batch)
+            if tcfg.grad_compression:
+                grads, err_buf = ef_compress_grads(grads, err_buf)
+            new_params, new_opt, om = _opt.update(tcfg.opt, grads, opt_state, params)
+            return new_params, new_opt, err_buf, dict(metrics, loss=loss, **om)
+
+        self._step_fn = jax.jit(train_step, donate_argnums=(0, 1, 2))
+
+    def init_state(self, rng=None):
+        rng = rng if rng is not None else jax.random.PRNGKey(self.tcfg.seed)
+        params = init_params(self.specs, rng)
+        if self.mesh is not None and self.rules is not None:
+            sh = spec_shardings(self.specs, self.mesh, self.rules)
+            params = jax.tree_util.tree_map(jax.device_put, params, sh)
+        opt_state = _opt.init(params)
+        err = (
+            jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+            if self.tcfg.grad_compression
+            else jax.tree_util.tree_map(lambda p: jnp.zeros((), jnp.float32), params)
+        )
+        return params, opt_state, err
+
+    # ------------------------------------------------------------------
+    def maybe_restore(self, state):
+        params, opt_state, err = state
+        shardings = None
+        if self.mesh is not None and self.rules is not None:
+            shardings = spec_shardings(self.specs, self.mesh, self.rules)
+        tree = {"params": params, "mu": opt_state.mu, "nu": opt_state.nu}
+        sh_tree = {"params": shardings, "mu": shardings, "nu": shardings} if shardings else None
+        restored, extra = self.ckpt.restore_latest(tree, shardings=sh_tree)
+        if restored is None:
+            return state
+        step = int(extra.get("step", 0))
+        self.step = step
+        opt_state = AdamWState(
+            step=jnp.asarray(step, jnp.int32), mu=restored["mu"], nu=restored["nu"]
+        )
+        return restored["params"], opt_state, err
+
+    def save(self, state):
+        params, opt_state, _ = state
+        tree = {"params": params, "mu": opt_state.mu, "nu": opt_state.nu}
+        self.ckpt.save(self.step, tree)
+
+    # ------------------------------------------------------------------
+    def run(self, data: Iterator[dict], n_steps: Optional[int] = None, state=None):
+        """Returns (state, history).  Raises NodeFailure mid-run if injected."""
+        if state is None:
+            state = self.maybe_restore(self.init_state())
+        params, opt_state, err = state
+        history = []
+        target = self.step + (n_steps or self.tcfg.steps)
+        while self.step < target:
+            if self.failure_injector is not None:
+                self.failure_injector(self.step)
+            batch = next(data)
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            params, opt_state, err, metrics = self._step_fn(params, opt_state, err, batch)
+            self.step += 1
+            if self.step % self.tcfg.log_every == 0 or self.step == target:
+                loss = float(metrics["loss"])
+                history.append({"step": self.step, "loss": loss,
+                                "grad_norm": float(metrics["grad_norm"])})
+            if self.step % self.tcfg.ckpt_every == 0:
+                self.save((params, opt_state, err))
+        return (params, opt_state, err), history

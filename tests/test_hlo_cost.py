@@ -1,0 +1,81 @@
+"""Trip-count-aware HLO analyzer: validate against programs with known FLOPs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_cost import analyze
+
+
+def _compile_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_single_matmul_flops():
+    m, k, n = 128, 256, 64
+    a = jnp.zeros((m, k), jnp.float32)
+    b = jnp.zeros((k, n), jnp.float32)
+    acc = analyze(_compile_text(lambda x, y: x @ y, a, b))
+    expected = 2 * m * k * n
+    assert abs(acc["flops"] - expected) / expected < 0.01, acc["flops"]
+
+
+def test_scan_multiplies_by_trip_count():
+    """A scan of T matmuls must count T x the single-matmul FLOPs (this is
+    exactly what XLA's own cost analysis gets wrong)."""
+    m = 64
+    a = jnp.zeros((m, m), jnp.float32)
+    T = 17
+
+    def fn(x):
+        def body(c, _):
+            return c @ a + c, None
+        out, _ = jax.lax.scan(body, x, None, length=T)
+        return out
+
+    acc = analyze(_compile_text(fn, jnp.ones((m, m), jnp.float32)))
+    expected = 2 * m * m * m * T
+    assert abs(acc["flops"] - expected) / expected < 0.05, (acc["flops"], expected)
+
+
+def test_nested_scan_trip_counts():
+    m, t_outer, t_inner = 32, 5, 7
+    a = jnp.zeros((m, m), jnp.float32)
+
+    def fn(x):
+        def inner(c, _):
+            return c @ a, None
+
+        def outer(c, _):
+            c2, _ = jax.lax.scan(inner, c, None, length=t_inner)
+            return c2, None
+
+        out, _ = jax.lax.scan(outer, x, None, length=t_outer)
+        return out
+
+    acc = analyze(_compile_text(fn, jnp.ones((m, m), jnp.float32)))
+    expected = 2 * m ** 3 * t_outer * t_inner
+    assert abs(acc["flops"] - expected) / expected < 0.05, (acc["flops"], expected)
+
+
+def test_bytes_scale_with_scan_length():
+    n = 4096
+
+    def fn_t(T):
+        def fn(x):
+            def body(c, _):
+                return c * 1.5 + 1.0, None
+            out, _ = jax.lax.scan(body, x, None, length=T)
+            return out
+        return fn
+
+    x = jnp.ones((n,), jnp.float32)
+    b1 = analyze(_compile_text(fn_t(10), x))["bytes"]
+    b2 = analyze(_compile_text(fn_t(40), x))["bytes"]
+    ratio = b2 / max(b1, 1)
+    assert 2.5 < ratio < 6.0, ratio  # ~4x more loop traffic
+
+
+def test_bf16_adjustment_halves_f32():
+    a = jnp.zeros((256, 256), jnp.float32)
+    acc = analyze(_compile_text(lambda x: x + 1.0, a))
+    assert acc["bytes_adj"] <= acc["bytes"] * 0.51

@@ -1,0 +1,104 @@
+"""Property-based tests for the two-stage robust optimizer (Eq. 2-10, Alg. 2)."""
+import dataclasses
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core.cost_model import SystemConfig, accuracy_table
+from repro.core.robust import BIG, RobustProblem, exact_oracle, solve_ccg, total_cost
+
+SYS = SystemConfig()
+PROB = RobustProblem.build(SYS)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    z=st.lists(st.floats(0.0, 1.0), min_size=4, max_size=16),
+    aq=st.lists(st.floats(0.45, 0.82), min_size=4, max_size=16),
+)
+def test_ccg_matches_exact_oracle(z, aq):
+    n = min(len(z), len(aq))
+    z = jnp.asarray(z[:n], jnp.float32)
+    aq = jnp.asarray(aq[:n], jnp.float32)
+    sol = solve_ccg(PROB, z, aq)
+    y, obj = exact_oracle(PROB, z, aq)
+    feasible = ~np.asarray(sol["infeasible"])
+    gap = np.abs(np.asarray(sol["o_up"] - obj))[feasible]
+    assert gap.size == 0 or gap.max() < 1e-5
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    z=st.lists(st.floats(0.0, 1.0), min_size=4, max_size=12),
+    aq=st.lists(st.floats(0.45, 0.75), min_size=4, max_size=12),
+)
+def test_upper_bound_dominates_lower(z, aq):
+    n = min(len(z), len(aq))
+    sol = solve_ccg(PROB, jnp.asarray(z[:n], jnp.float32), jnp.asarray(aq[:n], jnp.float32))
+    assert np.all(np.asarray(sol["o_up"]) >= np.asarray(sol["o_down"]) - 1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    z=st.lists(st.floats(0.0, 1.0), min_size=4, max_size=10),
+    aq=st.lists(st.floats(0.45, 0.72), min_size=4, max_size=10),
+    pole_idx=st.integers(0, 15),
+)
+def test_robust_guarantee_under_any_pole(z, aq, pole_idx):
+    """Realized cost under any u in the pole set never exceeds O_up for the
+    task's chosen configuration (that's what 'robust' means)."""
+    n = min(len(z), len(aq))
+    z = jnp.asarray(z[:n], jnp.float32)
+    aq = jnp.asarray(aq[:n], jnp.float32)
+    sol = solve_ccg(PROB, z, aq)
+    pole = PROB.poles[pole_idx % PROB.poles.shape[0]]
+    u = pole * PROB.u_dev
+    realized = total_cost(PROB, sol, z, aq, u=np.asarray(u))
+    feasible = ~np.asarray(sol["infeasible"])
+    bad = np.asarray(realized)[feasible] > np.asarray(sol["o_up"])[feasible] + 1e-5
+    assert not bad.any()
+
+
+def test_gamma_monotonicity():
+    """Larger uncertainty budget Γ can only increase the robust objective."""
+    z = jnp.asarray(np.random.default_rng(0).uniform(0, 1, 32), jnp.float32)
+    aq = jnp.asarray(np.random.default_rng(1).uniform(0.5, 0.75, 32), jnp.float32)
+    prev = None
+    for gamma in (0, 1, 2, 5):
+        prob = RobustProblem.build(dataclasses.replace(SYS, gamma=gamma))
+        sol = solve_ccg(prob, z, aq)
+        cur = np.asarray(sol["o_up"])
+        if prev is not None:
+            assert np.all(cur >= prev - 1e-6), f"gamma={gamma} decreased objective"
+        prev = cur
+
+
+def test_feasibility_is_respected():
+    z = jnp.asarray([0.2, 0.5, 0.9], jnp.float32)
+    aq = jnp.asarray([0.6, 0.65, 0.7], jnp.float32)
+    sol = solve_ccg(PROB, z, aq)
+    f = np.asarray(accuracy_table(SYS, z))
+    idx = np.arange(3)
+    acc = f[idx, np.asarray(sol["r"]), np.asarray(sol["p"]), np.asarray(sol["v"]),
+            np.asarray(sol["route"])]
+    infeasible = np.asarray(sol["infeasible"])
+    assert np.all(acc[~infeasible] >= np.asarray(aq)[~infeasible] + SYS.acc_margin_robust - 1e-6)
+
+
+def test_infeasible_fallback_maximizes_accuracy():
+    z = jnp.asarray([1.0], jnp.float32)
+    aq = jnp.asarray([0.99], jnp.float32)  # unattainable
+    sol = solve_ccg(PROB, z, aq)
+    assert bool(sol["infeasible"][0])
+    f = np.asarray(accuracy_table(SYS, z))[0]
+    chosen = f[int(sol["r"][0]), int(sol["p"][0]), int(sol["v"][0]), int(sol["route"][0])]
+    assert chosen >= f.max() - 1e-6
+
+
+def test_poles_respect_gamma_budget():
+    for gamma in (0, 1, 2, 3):
+        prob = RobustProblem.build(dataclasses.replace(SYS, gamma=gamma))
+        assert np.all(np.asarray(prob.poles).sum(axis=1) <= gamma)

@@ -1,0 +1,108 @@
+"""Serving simulator + baselines + paper-claim bands + straggler hedging."""
+import numpy as np
+import pytest
+
+from repro.core.cost_model import SystemConfig, accuracy_table
+from repro.runtime.straggler import hedged_dispatch, p99
+from repro.serving.baselines import make_method
+from repro.serving.simulator import SimConfig, Simulator
+
+SYS = SystemConfig()
+
+
+def _run(name, *, req="stable", fluct=0.1, seed=42, **kw):
+    sim = Simulator(SYS, SimConfig(n_rounds=6, n_tasks=50, requirement=req,
+                                   bw_fluctuation=fluct, seed=seed))
+    m = make_method(name, SYS, **kw)
+    sim.rng = np.random.default_rng(seed)
+    return sim.run(m)
+
+
+def test_r2evid_success_band():
+    res = _run("R2E-VID", req="stable")
+    assert res["success"] >= 0.9, res
+
+
+def test_r2evid_beats_cloud_only_on_cost():
+    ours = _run("R2E-VID", req="fluctuating", fluct=0.25)
+    a2 = _run("A2", req="fluctuating", fluct=0.25)
+    reduction = 1 - ours["cost"] / a2["cost"]
+    assert reduction > 0.3, f"cost reduction {reduction:.2%} below paper band"
+
+
+def test_r2evid_beats_nominal_methods_on_success():
+    ours = _run("R2E-VID", req="fluctuating", fluct=0.2)
+    for base in ("RDAP", "Sniper"):
+        b = _run(base, req="fluctuating", fluct=0.2)
+        assert ours["success"] > b["success"], (base, ours["success"], b["success"])
+
+
+def _run_ablation(**kw):
+    sim = Simulator(SYS, SimConfig(n_rounds=6, n_tasks=50, requirement="fluctuating",
+                                   bw_fluctuation=0.15, seed=42))
+    m = make_method("R2E-VID", SYS, **kw)
+    sim.rng = np.random.default_rng(42)
+    return sim.run(m)
+
+
+def test_ablation_directions():
+    full = _run_ablation()
+    no_s1 = _run_ablation(use_stage1=False)
+    no_s2 = _run_ablation(use_stage2=False)
+    # removing stage 1 hurts accuracy/success; removing stage 2 hurts cost
+    assert no_s1["accuracy"] < full["accuracy"]
+    assert no_s2["cost"] > full["cost"]
+
+
+def test_simulator_reproducible():
+    r1 = _run("JCAB", seed=7)
+    r2 = _run("JCAB", seed=7)
+    assert r1 == r2
+
+
+def test_accuracy_table_monotonicity():
+    """More resolution / bigger version / cloud tier never hurts accuracy."""
+    import jax.numpy as jnp
+    f = np.asarray(accuracy_table(SYS, jnp.asarray([0.5])))[0]  # (N, Z, K, 2)
+    assert np.all(np.diff(f, axis=0) >= -1e-6)   # resolution
+    assert np.all(np.diff(f, axis=2) >= -1e-6)   # version
+    assert np.all(f[..., 1] >= f[..., 0] - 1e-6)  # cloud >= edge
+
+
+def test_bandwidth_repair_meets_budget():
+    import jax.numpy as jnp
+    from repro.core.robust import RobustProblem, solve_ccg
+    from repro.core.router import enforce_bandwidth
+    from repro.core.cost_model import cost_tables
+
+    prob = RobustProblem.build(SYS)
+    rng = np.random.default_rng(0)
+    z = jnp.asarray(rng.uniform(0, 1, 80), jnp.float32)
+    aq = jnp.asarray(rng.uniform(0.5, 0.7, 80), jnp.float32)
+    sol = solve_ccg(prob, z, aq)
+    fixed, bw_hist = enforce_bandwidth(SYS, sol, z, aq, total_budget=200.0, rounds=60)
+    _, _, bw_tab = cost_tables(SYS)
+    final_bw = float(np.asarray(bw_tab)[np.asarray(fixed["r"]), np.asarray(fixed["p"]),
+                                        np.asarray(fixed["route"])].sum())
+    start_bw = float(bw_hist[0])
+    # repair monotonically reduces bandwidth draw and never violates accuracy
+    assert final_bw <= start_bw + 1e-6
+    hist = np.asarray(bw_hist)
+    assert np.all(np.diff(hist) <= 1e-6)
+    f = np.asarray(accuracy_table(SYS, z))
+    idx = np.arange(len(np.asarray(fixed["r"])))
+    acc = f[idx, np.asarray(fixed["r"]), np.asarray(fixed["p"]),
+            np.asarray(fixed["v"]), np.asarray(fixed["route"])]
+    infeasible = np.asarray(sol["infeasible"])
+    assert np.all(acc[~infeasible] >= np.asarray(aq)[~infeasible] - 1e-6)
+
+
+def test_hedged_dispatch_cuts_tail():
+    rng = np.random.default_rng(0)
+    base = rng.exponential(1.0, (4000, 2))
+    base[::50, 0] += 20.0  # stragglers on the primary
+    plain = base[:, 0]
+    hedged = hedged_dispatch(base, hedge_quantile=0.9)
+    assert p99(hedged) < 0.7 * p99(plain)
+    # hedging never makes the median worse
+    assert np.median(hedged) <= np.median(plain) + 1e-9

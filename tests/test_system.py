@@ -1,0 +1,98 @@
+"""End-to-end behaviour tests for the R2E-VID system: video stream ->
+motion features -> temporal gate -> two-stage robust routing -> pools."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (GateConfig, RobustProblem, RouterConfig, SystemConfig,
+                        feature_dim, gate_specs, route, segment_features,
+                        stage1_configure)
+from repro.data.video import VideoConfig, generate_stream, make_task_batch
+from repro.models.params import init_params
+
+SYS = SystemConfig()
+PROB = RobustProblem.build(SYS)
+GCFG = GateConfig(d_feature=feature_dim())
+
+
+def _pipeline_inputs(n_streams=6, n_segments=8, seed=0):
+    vcfg = VideoConfig()
+    streams = [generate_stream(vcfg, n_segments, rng=np.random.default_rng(seed + i))
+               for i in range(n_streams)]
+    dx = jnp.stack([
+        segment_features(jnp.asarray(f), vcfg.frames_per_segment) for f, _ in streams
+    ])
+    z = jnp.asarray([m.mean() for _, m in streams])
+    aq = jnp.asarray(make_task_batch(n_streams, "stable", seed=seed))
+    return dx, z, aq
+
+
+def test_route_pipeline_end_to_end():
+    dx, z, aq = _pipeline_inputs()
+    gp = init_params(gate_specs(GCFG), jax.random.PRNGKey(0))
+    sol = route(PROB, GCFG, gp, dx, z, aq)
+    m = dx.shape[0]
+    for key in ("route", "r", "p", "v", "tau"):
+        assert sol[key].shape == (m,)
+    assert jnp.all((sol["tau"] >= 0) & (sol["tau"] <= 1))
+    assert jnp.all((sol["route"] == 0) | (sol["route"] == 1))
+    assert jnp.all((sol["r"] >= 0) & (sol["r"] < SYS.n_res))
+    assert jnp.all((sol["v"] >= 0) & (sol["v"] < SYS.num_versions))
+
+
+def test_temporal_consistency_blocks_flapping():
+    """With a previous route and a tiny gate move, the route must hold."""
+    dx, z, aq = _pipeline_inputs()
+    gp = init_params(gate_specs(GCFG), jax.random.PRNGKey(0))
+    sol1 = route(PROB, GCFG, gp, dx, z, aq)
+    prev_route = 1 - sol1["route"]  # force disagreement with next decision
+    # same gate state -> |Δτ| ~ 0 -> flips forbidden -> must keep prev_route
+    sol2 = route(PROB, GCFG, gp, dx, z, aq,
+                 prev_route=prev_route, prev_tau=sol1["tau"],
+                 rcfg=RouterConfig(delta1=4.0))
+    np.testing.assert_array_equal(np.asarray(sol2["route"]), np.asarray(prev_route))
+
+
+def test_stage1_escalates_infeasible_to_cloud():
+    taus = jnp.asarray([0.1, 0.1])
+    z = jnp.asarray([1.0, 0.05])
+    # task 0: very hard content + high requirement -> edge v1 infeasible
+    aq = jnp.asarray([0.68, 0.55])
+    prev = -jnp.ones((2,), jnp.int32)
+    route_idx, r_idx = stage1_configure(SYS, taus, z, aq, prev, jnp.zeros((2,)))
+    assert int(route_idx[0]) == 1  # escalated (Alg. 1 line 8)
+    assert int(route_idx[1]) == 0  # easy task stays on edge
+
+
+def test_stage1_picks_smallest_feasible_resolution():
+    taus = jnp.asarray([0.1])
+    z = jnp.asarray([0.1])
+    aq = jnp.asarray([0.52])
+    prev = -jnp.ones((1,), jnp.int32)
+    _, r_idx = stage1_configure(SYS, taus, z, aq, prev, jnp.zeros((1,)))
+    from repro.core.cost_model import accuracy_table
+    f = np.asarray(accuracy_table(SYS, z))[0, :, -1, 0, 0]  # edge v1 at max fps
+    first_ok = int(np.argmax(f >= 0.52))
+    assert int(r_idx[0]) == first_ok
+
+
+def test_router_is_deterministic():
+    """Two identical calls give identical routing (pure function of inputs)."""
+    dx, z, aq = _pipeline_inputs(seed=3)
+    gp = init_params(gate_specs(GCFG), jax.random.PRNGKey(0))
+    s1 = route(PROB, GCFG, gp, dx, z, aq)
+    s2 = route(PROB, GCFG, gp, dx, z, aq)
+    np.testing.assert_array_equal(np.asarray(s1["route"]), np.asarray(s2["route"]))
+    np.testing.assert_array_equal(np.asarray(s1["v"]), np.asarray(s2["v"]))
+
+
+def test_pools_serve_routed_segments():
+    from repro.configs import get_smoke_config
+    from repro.serving.pools import make_tier_pools
+
+    pools = make_tier_pools(get_smoke_config("qwen1.5-0.5b"),
+                            get_smoke_config("qwen3-8b"))
+    toks = jnp.ones((2, 16), jnp.int32)
+    out = pools[0].serve_segment(toks, decode_tokens=4)
+    assert out.shape == (2, 4)
+    assert pools[0].stats.tokens == 2 * 20
