@@ -1,0 +1,127 @@
+"""Router engine benchmark: steady-state ``route_step`` latency + simulator
+realization throughput.
+
+  PYTHONPATH=src python benchmarks/router_bench.py [--streams 64] [--steps 50]
+
+Prints ``name,us_per_call,derived`` CSV lines (the repo benchmark contract):
+
+  router/route_step      — steady-state latency of one jit-compiled streaming
+                           step (gate advance + CCG + C6 repair) and the
+                           derived segments/sec
+  router/route_windowed  — the stateless windowed ``route`` on the same load
+                           (re-scans the whole feature window each call)
+  sim/realize_vectorized — vectorized ``Simulator.realize``
+  sim/realize_reference  — original per-task loop, plus max metric deviation
+                           between the two on a fixed seed
+  sim/realize_batch_per_round — amortized per-round cost when whole rounds
+                           are realized in one vmapped batch
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _timeit(fn, iters: int) -> float:
+    fn()  # warm-up / compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def bench_route_step(streams: int, steps: int, window: int = 8):
+    from repro.core.cost_model import SystemConfig
+    from repro.core.features import feature_dim
+    from repro.core.gating import GateConfig, gate_specs
+    from repro.core.robust import RobustProblem
+    from repro.core.router import RouterEngine, route
+    from repro.models.params import init_params
+
+    sys_ = SystemConfig()
+    prob = RobustProblem.build(sys_)
+    gcfg = GateConfig(d_feature=feature_dim())
+    gparams = init_params(gate_specs(gcfg), jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    z = jnp.asarray(rng.uniform(0, 1, streams), jnp.float32)
+    aq = jnp.asarray(rng.uniform(0.5, 0.75, streams), jnp.float32)
+    dx = jnp.asarray(rng.normal(size=(streams, feature_dim())), jnp.float32)
+
+    engine = RouterEngine(prob, gcfg, gparams, n_streams=streams)
+
+    def step():
+        sol = engine.step(dx, z, aq)
+        jax.block_until_ready(sol["route"])
+
+    us_step = _timeit(step, steps)
+    seg_per_s = streams / (us_step / 1e6)
+
+    dx_win = jnp.asarray(rng.normal(size=(streams, window, feature_dim())), jnp.float32)
+
+    def windowed():
+        sol = route(prob, gcfg, gparams, dx_win, z, aq)
+        jax.block_until_ready(sol["route"])
+
+    us_win = _timeit(windowed, max(steps // 4, 3))
+    return [
+        ("router/route_step", us_step, f"segments_per_s={seg_per_s:.0f}"),
+        ("router/route_windowed", us_win, f"window={window}"),
+    ]
+
+
+def bench_realize(n_tasks: int, iters: int = 20):
+    from repro.core.cost_model import SystemConfig
+    from repro.serving.baselines import make_method
+    from repro.serving.simulator import SimConfig, Simulator
+
+    sys_ = SystemConfig()
+    sim = Simulator(sys_, SimConfig(n_tasks=n_tasks, seed=3, bw_fluctuation=0.2))
+    rnd = sim.sample_round()
+    cfg = make_method("JCAB", sys_)(rnd, {})
+
+    us_vec = _timeit(lambda: sim.realize(rnd, cfg), iters)
+    us_ref = _timeit(lambda: sim.realize_reference(rnd, cfg), iters)
+
+    n_batch = 16
+    rnds = [rnd] * n_batch
+    cfgs = [cfg] * n_batch
+    us_batch = _timeit(lambda: sim.realize_batch(rnds, cfgs), max(iters // 4, 3))
+    us_batch_per_round = us_batch / n_batch
+
+    # parity on a fixed seed: identical observation noise for both paths
+    noise = np.zeros(n_tasks)
+    met_v = sim._realize_deterministic(rnd, cfg)
+    met_r = sim.realize_reference(rnd, cfg, noise=noise)
+    dev = max(
+        float(np.abs(met_v[k] - met_r[k]).max())
+        for k in ("delay", "energy", "cost", "accuracy")
+    )
+    return [
+        ("sim/realize_vectorized", us_vec, f"n_tasks={n_tasks}"),
+        ("sim/realize_reference", us_ref,
+         f"speedup={us_ref / max(us_vec, 1e-9):.1f}x,max_dev={dev:.2e}"),
+        ("sim/realize_batch_per_round", us_batch_per_round,
+         f"rounds={n_batch},speedup_vs_loop={us_ref / max(us_batch_per_round, 1e-9):.1f}x"),
+    ]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--streams", type=int, default=64)
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--tasks", type=int, default=200)
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    for row in bench_route_step(args.streams, args.steps):
+        print(f"{row[0]},{row[1]:.1f},{row[2]}")
+    for row in bench_realize(args.tasks):
+        print(f"{row[0]},{row[1]:.1f},{row[2]}")
+
+
+if __name__ == "__main__":
+    main()

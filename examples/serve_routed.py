@@ -1,5 +1,6 @@
-"""Routed serving: R2E-VID gate + robust router dispatching batched requests
-onto live edge/cloud model pools.
+"""Routed serving: the stateful streaming router engine (gate recurrence +
+robust two-stage selection per segment) dispatching batched requests onto
+live edge/cloud model pools.
 
   PYTHONPATH=src python examples/serve_routed.py
 """
@@ -7,5 +8,6 @@ from repro.launch.serve import main
 
 if __name__ == "__main__":
     import sys
-    sys.argv = [sys.argv[0], "--rounds", "3", "--streams", "8"]
+    sys.argv = [sys.argv[0], "--rounds", "3", "--streams", "8",
+                "--segments-per-round", "4"]
     main()

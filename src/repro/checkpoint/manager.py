@@ -6,6 +6,9 @@ Layout:  <dir>/step_<n>/manifest.msgpack  (tree structure + dtypes/shapes)
 Restore accepts an optional sharding tree — arrays are ``device_put`` with
 the *target* sharding, so a checkpoint written on a 16x16 mesh restores
 cleanly onto a shrunken (elastic) mesh or a single host.
+
+``zstandard`` is optional: without it payloads are written uncompressed and
+the manifest records ``codec`` so either build can restore either format.
 """
 from __future__ import annotations
 
@@ -18,7 +21,11 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ImportError:  # optional dependency; fall back to raw payloads
+    zstandard = None
 
 
 def _flatten(tree):
@@ -28,10 +35,12 @@ def _flatten(tree):
 
 def save(path: str, tree: Any, *, extra: Optional[dict] = None) -> str:
     leaves, treedef = _flatten(tree)
+    codec = "zstd" if zstandard is not None else "raw"
     manifest = {
         "treedef": str(treedef),
         "n_leaves": len(leaves),
         "extra": extra or {},
+        "codec": codec,
         "leaves": [],
     }
     payloads = []
@@ -46,11 +55,15 @@ def save(path: str, tree: Any, *, extra: Optional[dict] = None) -> str:
     try:
         with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
             f.write(msgpack.packb(manifest))
-        cctx = zstandard.ZstdCompressor(level=3)
         with open(os.path.join(tmp, "data.zst"), "wb") as f:
-            with cctx.stream_writer(f) as w:
+            if codec == "zstd":
+                cctx = zstandard.ZstdCompressor(level=3)
+                with cctx.stream_writer(f) as w:
+                    for p in payloads:
+                        w.write(p)
+            else:
                 for p in payloads:
-                    w.write(p)
+                    f.write(p)
         if os.path.exists(path):
             shutil.rmtree(path)
         os.replace(tmp, path)  # atomic publish
@@ -64,9 +77,17 @@ def restore(path: str, target_tree: Any, *, shardings: Any = None):
     """target_tree supplies the pytree structure (values ignored)."""
     with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
         manifest = msgpack.unpackb(f.read())
-    dctx = zstandard.ZstdDecompressor()
+    codec = manifest.get("codec", "zstd")
     with open(os.path.join(path, "data.zst"), "rb") as f:
-        raw = dctx.stream_reader(f).read()
+        if codec == "zstd":
+            if zstandard is None:
+                raise RuntimeError(
+                    "checkpoint was written with codec='zstd' but zstandard "
+                    "is not installed"
+                )
+            raw = zstandard.ZstdDecompressor().stream_reader(f).read()
+        else:
+            raw = f.read()
 
     leaves_meta = manifest["leaves"]
     arrays = []

@@ -3,5 +3,15 @@ primary contribution)."""
 from repro.core.cost_model import SystemConfig, accuracy_table, cost_tables  # noqa: F401
 from repro.core.features import feature_dim, motion_features, segment_features  # noqa: F401
 from repro.core.gating import GateConfig, gate_loss, gate_scan, gate_scan_batch, gate_specs  # noqa: F401
+from repro.core.lattice import DecisionLattice, gflops_table, version_deviations  # noqa: F401
 from repro.core.robust import RobustProblem, exact_oracle, solve_ccg, total_cost  # noqa: F401
-from repro.core.router import RouterConfig, enforce_bandwidth, route, stage1_configure  # noqa: F401
+from repro.core.router import (  # noqa: F401
+    RouterConfig,
+    RouterEngine,
+    RouterState,
+    enforce_bandwidth,
+    init_router_state,
+    route,
+    route_step,
+    stage1_configure,
+)

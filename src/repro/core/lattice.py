@@ -1,0 +1,169 @@
+"""Unified decision lattice for the two-stage router (paper §3.1).
+
+Every R2E-VID planner — the CCG robust optimizer, the Stage-1 warm start,
+the C6 bandwidth repair, and all nominal baselines — searches the same
+per-task decision space
+
+    y = (route ∈ {edge, cloud}, r ∈ R, p ∈ P)   first stage, F = 2·N·Z options
+    v ∈ V                                        second stage, K versions
+
+Historically each consumer re-derived the flattened index space with its own
+``transpose``/``reshape`` math; :class:`DecisionLattice` owns it once:
+
+  * the canonical route-major flat order  y = (route·N + r)·Z + p  and the
+    bidirectional ``flatten_index`` / ``unflatten_index`` maps,
+  * cached cost tables in both the natural (N, Z, [K,] 2) and flat
+    (F[, K]) layouts, plus the per-config bandwidth draw and GFLOPs,
+  * vectorized ``accuracy`` / ``accuracy_flat`` / ``feasible_flat`` over
+    task batches, and the shared version-deviation vector ũ.
+
+``DecisionLattice.build`` is memoized per :class:`SystemConfig` (the config
+is a frozen, hashable dataclass), so planners can call it freely without
+rebuilding tables.  The lattice is a registered pytree (``sys`` static,
+tables as leaves) and can be closed over or passed through ``jax.jit``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cost_model import (
+    SystemConfig,
+    accuracy_table,
+    cost_tables,
+    version_flops,
+)
+
+
+def version_deviations(sys: SystemConfig) -> jnp.ndarray:
+    """Max relative compute deviation ũ_k per version (K,).
+
+    Deviation grows with model size — bigger models queue worse under load
+    (paper §3.3).  Shared by the robust solver, the ablation adapter, and the
+    simulator's adversarial-u realization.
+    """
+    k = jnp.arange(sys.num_versions, dtype=jnp.float32)
+    return sys.u_dev * (0.6 + 0.4 * k / (sys.num_versions - 1))
+
+
+def _gflops_table(sys: SystemConfig) -> np.ndarray:
+    """GFLOPs per segment for every (r, p, v, tier): (N, Z, K, 2), float64."""
+    fps = np.asarray(sys.fps_options, np.float32)
+    gf = np.zeros((sys.n_res, sys.num_versions, 2))
+    for i, res in enumerate(sys.resolutions):
+        for k in range(sys.num_versions):
+            for t in range(2):
+                gf[i, k, t] = version_flops(sys, t, k, int(res))
+    return gf[:, None, :, :] * fps[None, :, None, None] * sys.segment_sec
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("c1", "b2", "bw", "c1_flat", "b2_flat", "bw_flat", "u_dev"),
+    meta_fields=("sys",),
+)
+@dataclasses.dataclass(frozen=True)
+class DecisionLattice:
+    sys: SystemConfig
+    c1: jnp.ndarray       # (N, Z, 2)    first-stage cost
+    b2: jnp.ndarray       # (N, Z, K, 2) second-stage nominal cost
+    bw: jnp.ndarray       # (N, Z, 2)    bandwidth draw (Mbps)
+    c1_flat: jnp.ndarray  # (F,)         route-major flat first-stage cost
+    b2_flat: jnp.ndarray  # (F, K)       route-major flat second-stage cost
+    bw_flat: jnp.ndarray  # (F,)         route-major flat bandwidth draw
+    u_dev: jnp.ndarray    # (K,)         version deviation vector ũ
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def build(cls, sys: SystemConfig) -> "DecisionLattice":
+        return _build_cached(sys)
+
+    @property
+    def n_flat(self) -> int:
+        """F = 2·N·Z first-stage options."""
+        return 2 * self.sys.n_res * self.sys.n_fps
+
+    # -- index maps -----------------------------------------------------
+    def flatten_index(self, route, r, p):
+        """(route, r, p) -> flat first-stage index y (route-major)."""
+        return (route * self.sys.n_res + r) * self.sys.n_fps + p
+
+    def unflatten_index(self, y):
+        """Flat first-stage index y -> (route, r, p)."""
+        nz = self.sys.n_res * self.sys.n_fps
+        route = y // nz
+        rp = y % nz
+        return route, rp // self.sys.n_fps, rp % self.sys.n_fps
+
+    def to_flat(self, table):
+        """Reorder a (..., N, Z, K, 2) table into the flat (..., F, K) layout."""
+        moved = jnp.moveaxis(table, -1, -4)  # (..., 2, N, Z, K)
+        return moved.reshape(*table.shape[:-4], self.n_flat, self.sys.num_versions)
+
+    # -- accuracy / feasibility ----------------------------------------
+    def accuracy(self, difficulty):
+        """f(r, p, v, y | z): (..., N, Z, K, 2)."""
+        return accuracy_table(self.sys, difficulty)
+
+    def accuracy_flat(self, difficulty):
+        """Accuracy in the flat layout: (..., F, K)."""
+        return self.to_flat(self.accuracy(difficulty))
+
+    def feasible_flat(self, difficulty, acc_req, margin):
+        """(accuracy_flat, feasibility mask) for a task batch.
+
+        difficulty/acc_req: (M,).  Returns ((M, F, K), (M, F, K) bool) with
+        feasibility f >= A^q + margin.
+        """
+        f = self.accuracy_flat(difficulty)
+        return f, f >= (jnp.asarray(acc_req) + margin)[..., None, None]
+
+    # -- solution costing ----------------------------------------------
+    def solution_cost(self, sol, u=None):
+        """Realized cost c1 + b2·(1+u_v) of a (route, r, p, v) solution."""
+        route, r, p, v = sol["route"], sol["r"], sol["p"], sol["v"]
+        c1 = self.c1[r, p, route]
+        b = self.b2[r, p, v, route]
+        if u is not None:
+            b = b * (1.0 + jnp.asarray(u)[v])
+        return c1 + b
+
+    def solution_bandwidth(self, sol):
+        """Per-task bandwidth draw (Mbps) of a (route, r, p) solution."""
+        return self.bw[sol["r"], sol["p"], sol["route"]]
+
+
+@functools.lru_cache(maxsize=32)
+def _build_cached(sys: SystemConfig) -> DecisionLattice:
+    c1, b2, bw = cost_tables(sys)
+    k = sys.num_versions
+    f = 2 * sys.n_res * sys.n_fps
+    # route-major flat layout: y = (route·N + r)·Z + p
+    c1_flat = jnp.moveaxis(c1, -1, 0).reshape(f)
+    b2_flat = jnp.moveaxis(b2, -1, 0).reshape(f, k)
+    bw_flat = jnp.moveaxis(bw, -1, 0).reshape(f)
+    return DecisionLattice(
+        sys=sys,
+        c1=c1,
+        b2=b2,
+        bw=bw,
+        c1_flat=c1_flat,
+        b2_flat=b2_flat,
+        bw_flat=bw_flat,
+        u_dev=version_deviations(sys),
+    )
+
+
+def gflops_table(sys: SystemConfig) -> np.ndarray:
+    """Cached (N, Z, K, 2) GFLOPs-per-segment table (float64, host-side)."""
+    return _gflops_cached(sys)
+
+
+@functools.lru_cache(maxsize=32)
+def _gflops_cached(sys: SystemConfig) -> np.ndarray:
+    return _gflops_table(sys)

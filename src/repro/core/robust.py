@@ -18,6 +18,9 @@ column-and-constraint master (Alg. 2) alternates:
 
 until O_up − O_down ≤ θ.  Everything is vectorized over tasks with vmap;
 ``exact_oracle`` brute-forces min_y max_u min_v for tests.
+
+All flattened-index bookkeeping lives in :class:`DecisionLattice`
+(``repro.core.lattice``) — this module never reshapes the lattice itself.
 """
 from __future__ import annotations
 
@@ -27,7 +30,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.cost_model import SystemConfig, accuracy_table, cost_tables
+from repro.core.cost_model import SystemConfig
+from repro.core.lattice import DecisionLattice
 
 BIG = 1e9
 
@@ -45,24 +49,37 @@ def _poles(num_versions: int, gamma: int):
 
 @partial(
     jax.tree_util.register_dataclass,
-    data_fields=("c1", "b2", "poles", "u_dev"),
-    meta_fields=("sys",),
+    data_fields=("lat", "poles"),
+    meta_fields=(),
 )
 @dataclasses.dataclass(frozen=True)
 class RobustProblem:
-    sys: SystemConfig
-    c1: jnp.ndarray        # (N, Z, 2) first-stage cost
-    b2: jnp.ndarray        # (N, Z, K, 2) second-stage nominal cost
+    lat: DecisionLattice
     poles: jnp.ndarray     # (P, K) pole indicators
-    u_dev: jnp.ndarray     # (K,) max deviations ũ_k
 
     @classmethod
     def build(cls, sys: SystemConfig):
-        c1, b2, _ = cost_tables(sys)
+        lat = DecisionLattice.build(sys)
         poles = _poles(sys.num_versions, sys.gamma)
-        # deviation grows with model size (bigger models queue worse)
-        u_dev = sys.u_dev * (0.6 + 0.4 * jnp.arange(sys.num_versions) / (sys.num_versions - 1))
-        return cls(sys=sys, c1=c1, b2=b2, poles=poles, u_dev=u_dev)
+        return cls(lat=lat, poles=poles)
+
+    @property
+    def sys(self) -> SystemConfig:
+        return self.lat.sys
+
+    @property
+    def u_dev(self):
+        """(K,) max deviations ũ_k — single source of truth is the lattice."""
+        return self.lat.u_dev
+
+    # back-compat views of the cost tables (natural layout)
+    @property
+    def c1(self):
+        return self.lat.c1
+
+    @property
+    def b2(self):
+        return self.lat.b2
 
 
 def recourse_value(prob: RobustProblem, feas, b2_yrp, pole):
@@ -79,20 +96,18 @@ def solve_ccg(prob: RobustProblem, difficulty, acc_req, max_iters: int = 8, thet
     difficulty: (M,) content difficulty z; acc_req: (M,) A^q_i.
     Returns dict with y (route), r, p, v indices + objective bounds.
     """
-    sys = prob.sys
-    f = accuracy_table(sys, difficulty)              # (M, N, Z, K, 2)
+    lat = prob.lat
+    sys = lat.sys
     # C1 protected with the robust accuracy margin (h in the Benders cuts)
-    feas = f >= (acc_req + sys.acc_margin_robust)[:, None, None, None, None]
-    # cost arranged per first-stage option (N*Z*2) x versions
-    c1 = prob.c1.transpose(2, 0, 1).reshape(-1)       # (F,) F = 2*N*Z
-    b2 = prob.b2.transpose(3, 0, 1, 2).reshape(-1, sys.num_versions)  # (F, K)
-    feas_f = feas.transpose(0, 4, 1, 2, 3).reshape(feas.shape[0], -1, sys.num_versions)
+    f_flat, feas_f = lat.feasible_flat(difficulty, acc_req, sys.acc_margin_robust)
+    c1 = lat.c1_flat                                  # (F,)
+    b2 = lat.b2_flat                                  # (F, K)
 
     def per_task(feas_i):
         # any first-stage option with no feasible v is excluded from MP1
         fs_ok = feas_i.any(axis=-1)                      # (F,)
 
-        def pole_recourse(u_mask, y_all=True):
+        def pole_recourse(u_mask):
             u = u_mask * prob.u_dev                      # (K,)
             vals = jnp.where(feas_i, b2 * (1.0 + u), BIG)  # (F, K)
             return vals.min(axis=-1)                     # (F,)
@@ -139,18 +154,12 @@ def solve_ccg(prob: RobustProblem, difficulty, acc_req, max_iters: int = 8, thet
     # fall back to the max-accuracy configuration (which also covers margin-
     # free feasibility when any config clears A^q exactly)
     none_ok = ~feas_f.any(axis=(1, 2))
-    f_flat = f.transpose(0, 4, 1, 2, 3).reshape(f.shape[0], -1)
-    best_acc = f_flat.argmax(axis=1)
+    best_acc = f_flat.reshape(f_flat.shape[0], -1).argmax(axis=1)
     ba_f = best_acc // sys.num_versions
     ba_v = best_acc % sys.num_versions
     y_f = jnp.where(none_ok, ba_f, y_f)
     v_star = jnp.where(none_ok, ba_v, v_star)
-    # unflatten first-stage index F = 2*N*Z -> (route, r, p)
-    nz = sys.n_res * sys.n_fps
-    route = y_f // nz
-    rp = y_f % nz
-    r_idx = rp // sys.n_fps
-    p_idx = rp % sys.n_fps
+    route, r_idx, p_idx = lat.unflatten_index(y_f)
     return {
         "route": route, "r": r_idx, "p": p_idx, "v": v_star,
         "o_up": o_up, "o_down": o_down, "iters": iters, "infeasible": none_ok,
@@ -159,12 +168,10 @@ def solve_ccg(prob: RobustProblem, difficulty, acc_req, max_iters: int = 8, thet
 
 def exact_oracle(prob: RobustProblem, difficulty, acc_req):
     """Brute force min_y max_{u∈poles} min_v — test oracle."""
-    sys = prob.sys
-    f = accuracy_table(sys, difficulty)
-    feas = f >= (acc_req + sys.acc_margin_robust)[:, None, None, None, None]
-    c1 = prob.c1.transpose(2, 0, 1).reshape(-1)
-    b2 = prob.b2.transpose(3, 0, 1, 2).reshape(-1, sys.num_versions)
-    feas_f = feas.transpose(0, 4, 1, 2, 3).reshape(feas.shape[0], -1, sys.num_versions)
+    lat = prob.lat
+    c1 = lat.c1_flat
+    b2 = lat.b2_flat
+    _, feas_f = lat.feasible_flat(difficulty, acc_req, lat.sys.acc_margin_robust)
 
     def per_task(feas_i):
         u = prob.poles[:, None, :] * prob.u_dev        # (P, 1, K)
@@ -182,10 +189,4 @@ def exact_oracle(prob: RobustProblem, difficulty, acc_req):
 
 def total_cost(prob: RobustProblem, sol, difficulty, acc_req, u=None):
     """Realized cost of a solution under deviation u ((K,) or None=nominal)."""
-    sys = prob.sys
-    route, r, p, v = sol["route"], sol["r"], sol["p"], sol["v"]
-    c1 = prob.c1[r, p, route]
-    b = prob.b2[r, p, v, route]
-    if u is not None:
-        b = b * (1.0 + u[v])
-    return c1 + b
+    return prob.lat.solution_cost(sol, u=u)

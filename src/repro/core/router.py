@@ -1,4 +1,4 @@
-"""R2E-VID two-stage router (paper Alg. 1 + Alg. 2 glue).
+"""R2E-VID two-stage router (paper Alg. 1 + Alg. 2 glue) + streaming engine.
 
 Stage 1 (Alg. 1): the temporal gate scores each segment (τ_t); the adaptive
 configuration picks the smallest resolution meeting the accuracy requirement
@@ -12,6 +12,16 @@ Stage 2 (Alg. 2): the CCG robust optimizer refines (r, p, v, y) under the
 The bandwidth budget C6 (Σ B_i ≤ B) is enforced by a vectorized demotion
 repair pass: tasks with the most bandwidth and most accuracy slack step down
 fidelity until the budget holds.
+
+Two entry points:
+
+  * :func:`route` — windowed, stateless: scans the gate over a whole
+    (M, T, d) feature window each call.  Kept for offline planning and
+    back-compat.
+  * :class:`RouterState` + :func:`route_step` — the streaming engine.  The
+    gate hidden state, ring buffer, and previous (route, τ) thread through a
+    fully jit-compiled per-segment step, so multi-round serving touches each
+    segment's features exactly once and never rebuilds tables.
 """
 from __future__ import annotations
 
@@ -21,8 +31,9 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.cost_model import SystemConfig, accuracy_table, cost_tables
-from repro.core.gating import GateConfig, gate_scan_batch
+from repro.core.cost_model import SystemConfig
+from repro.core.gating import GateConfig, GateState, gate_scan_batch, gate_step, init_state
+from repro.core.lattice import DecisionLattice
 from repro.core.robust import BIG, RobustProblem, solve_ccg
 
 
@@ -34,13 +45,34 @@ class RouterConfig:
     repair_rounds: int = 8        # C6 demotion passes
 
 
+def _as_lattice(sys_or_lat) -> DecisionLattice:
+    if isinstance(sys_or_lat, DecisionLattice):
+        return sys_or_lat
+    return DecisionLattice.build(sys_or_lat)
+
+
+def temporal_flip_allowed(taus, prev_tau, rcfg: RouterConfig):
+    """Temporal-consistency constraint (Eq. after (6)): with binary y a route
+    FLIP is only allowed when the gate moved enough: δ(|τ_t − τ_{t−1}|) ≥ 1."""
+    return (jnp.abs(taus - prev_tau) * rcfg.delta1 + rcfg.delta0) >= 1.0
+
+
+def apply_temporal_consistency(route, prev_route, taus, prev_tau, rcfg: RouterConfig):
+    """Suppress forbidden flips; ``prev_route < 0`` means no history (allowed)."""
+    allowed = temporal_flip_allowed(taus, prev_tau, rcfg)
+    flip = route != prev_route
+    return jnp.where(flip & ~allowed & (prev_route >= 0), prev_route, route)
+
+
 # ---------------------------------------------------------------------------
 # Stage 1: adaptive edge-cloud configuration (Alg. 1)
 # ---------------------------------------------------------------------------
-def stage1_configure(sys: SystemConfig, taus, difficulty, acc_req, prev_route, prev_tau,
+def stage1_configure(sys_or_lat, taus, difficulty, acc_req, prev_route, prev_tau,
                      rcfg: RouterConfig = RouterConfig()):
     """Vectorized Alg. 1.  All inputs (M,).  Returns route, r_idx warm starts."""
-    f = accuracy_table(sys, difficulty)                  # (M, N, Z, K, 2)
+    lat = _as_lattice(sys_or_lat)
+    sys = lat.sys
+    f = lat.accuracy(difficulty)                         # (M, N, Z, K, 2)
     # f_i(r, v1) at the max fps, per tier (Alg.1 line 3: guided by τ)
     f_edge_v1 = f[:, :, -1, 0, 0]                        # (M, N)
     feasible_edge = f_edge_v1 >= acc_req[:, None]
@@ -50,24 +82,21 @@ def stage1_configure(sys: SystemConfig, taus, difficulty, acc_req, prev_route, p
     r_idx = jnp.where(any_ok, first_ok, sys.n_res - 1)
     # Alg.1 line 8: escalate to cloud while infeasible on edge
     route = jnp.where(any_ok, (taus > rcfg.tau_cloud).astype(jnp.int32), 1)
-    # temporal consistency constraint (Eq. after (6)):
-    # |y_t - y_{t-1}| <= δ(|τ_t - τ_{t-1}|); with binary y this means a route
-    # FLIP is only allowed when the gate moved enough.
-    allowed = (jnp.abs(taus - prev_tau) * rcfg.delta1 + rcfg.delta0) >= 1.0
-    flip = route != prev_route
-    route = jnp.where(flip & ~allowed & (prev_route >= 0), prev_route, route)
+    route = apply_temporal_consistency(route, prev_route, taus, prev_tau, rcfg)
     return route, r_idx
 
 
 # ---------------------------------------------------------------------------
 # C6 bandwidth repair
 # ---------------------------------------------------------------------------
-def enforce_bandwidth(sys: SystemConfig, sol, difficulty, acc_req, total_budget=None,
+def enforce_bandwidth(sys_or_lat, sol, difficulty, acc_req, total_budget=None,
                       rounds: int = 8):
     """Demote (r, p) of over-budget tasks with the largest bandwidth draw that
     remain feasible after demotion; fixed-round vectorized repair."""
-    _, _, bw_tab = cost_tables(sys)                      # (N, Z, 2) Mbps
-    f = accuracy_table(sys, difficulty)
+    lat = _as_lattice(sys_or_lat)
+    sys = lat.sys
+    bw_tab = lat.bw                                      # (N, Z, 2) Mbps
+    f = lat.accuracy(difficulty)
     budget = sys.total_bw_mbps if total_budget is None else total_budget
 
     margin = sys.acc_margin_robust
@@ -98,7 +127,104 @@ def enforce_bandwidth(sys: SystemConfig, sol, difficulty, acc_req, total_budget=
 
 
 # ---------------------------------------------------------------------------
-# Full two-stage pipeline
+# Streaming engine: stateful per-segment routing
+# ---------------------------------------------------------------------------
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("prev_route", "prev_tau", "gate"),
+    meta_fields=(),
+)
+@dataclasses.dataclass(frozen=True)
+class RouterState:
+    """Carry of the streaming router: per-stream gate recurrence + history."""
+    prev_route: jnp.ndarray   # (M,) int32, -1 = no previous segment
+    prev_tau: jnp.ndarray     # (M,) float32
+    gate: GateState           # batched: h (M, m), var_buf (M, T, d), var_idx (M,)
+
+
+def init_router_state(gate_cfg: GateConfig, n_streams: int) -> RouterState:
+    gate = jax.vmap(lambda _: init_state(gate_cfg))(jnp.arange(n_streams))
+    return RouterState(
+        prev_route=-jnp.ones((n_streams,), jnp.int32),
+        prev_tau=jnp.zeros((n_streams,), jnp.float32),
+        gate=gate,
+    )
+
+
+@partial(jax.jit, static_argnames=("gate_cfg", "rcfg"))
+def route_step(
+    prob: RobustProblem,
+    gate_cfg: GateConfig,
+    gate_params,
+    state: RouterState,
+    dx,                   # (M, d) motion features of THIS segment per stream
+    difficulty,           # (M,)
+    acc_req,              # (M,)
+    rcfg: RouterConfig = RouterConfig(),
+):
+    """One fully jit-compiled streaming step: (state, segment batch) -> (state, sol).
+
+    Advances the gate recurrence by one segment (no window re-scan), runs the
+    two-stage robust selection, applies the temporal-consistency constraint
+    against the carried history, and repairs the C6 bandwidth budget.
+    """
+    lat = prob.lat
+    new_gate, (taus, _gate_means) = jax.vmap(
+        lambda s, x: gate_step(gate_cfg, gate_params, s, x)
+    )(state.gate, dx)
+
+    warm_route, warm_r = stage1_configure(
+        lat, taus, difficulty, acc_req, state.prev_route, state.prev_tau, rcfg
+    )
+    sol = solve_ccg(prob, difficulty, acc_req)
+    # Stage-1 consistency overrides Stage-2 route flips that the gate forbids
+    sol = dict(sol, route=apply_temporal_consistency(
+        sol["route"], state.prev_route, taus, state.prev_tau, rcfg
+    ))
+    sol, bw_hist = enforce_bandwidth(lat, sol, difficulty, acc_req,
+                                     rounds=rcfg.repair_rounds)
+    sol["tau"] = taus
+    sol["warm_route"] = warm_route
+    sol["warm_r"] = warm_r
+    sol["bw_history"] = bw_hist
+    new_state = RouterState(
+        prev_route=sol["route"].astype(jnp.int32),
+        prev_tau=taus.astype(jnp.float32),
+        gate=new_gate,
+    )
+    return new_state, sol
+
+
+class RouterEngine:
+    """Convenience wrapper threading :class:`RouterState` through ``route_step``.
+
+    Owns the compiled step and the per-stream state; ``step`` consumes one
+    (M, d) segment feature batch and returns the routing solution.  Steady
+    state does zero table rebuilding and zero window re-scans.
+    """
+
+    def __init__(self, prob: RobustProblem, gate_cfg: GateConfig, gate_params,
+                 n_streams: int, rcfg: RouterConfig = RouterConfig()):
+        self.prob = prob
+        self.gate_cfg = gate_cfg
+        self.gate_params = gate_params
+        self.rcfg = rcfg
+        self.state = init_router_state(gate_cfg, n_streams)
+
+    def step(self, dx, difficulty, acc_req):
+        self.state, sol = route_step(
+            self.prob, self.gate_cfg, self.gate_params, self.state,
+            dx, difficulty, acc_req, rcfg=self.rcfg,
+        )
+        return sol
+
+    def reset(self, n_streams: int | None = None):
+        m = n_streams if n_streams is not None else self.state.prev_route.shape[0]
+        self.state = init_router_state(self.gate_cfg, m)
+
+
+# ---------------------------------------------------------------------------
+# Full two-stage pipeline (windowed / stateless)
 # ---------------------------------------------------------------------------
 def route(
     prob: RobustProblem,
@@ -111,7 +237,7 @@ def route(
     prev_tau=None,
     rcfg: RouterConfig = RouterConfig(),
 ):
-    sys = prob.sys
+    lat = prob.lat
     m = dx_segments.shape[0]
     if prev_route is None:
         prev_route = -jnp.ones((m,), jnp.int32)
@@ -122,15 +248,15 @@ def route(
     taus = taus_seq[:, -1]
 
     warm_route, warm_r = stage1_configure(
-        sys, taus, difficulty, acc_req, prev_route, prev_tau, rcfg
+        lat, taus, difficulty, acc_req, prev_route, prev_tau, rcfg
     )
     sol = solve_ccg(prob, difficulty, acc_req)
     # Stage-1 consistency overrides Stage-2 route flips that the gate forbids
-    allowed = (jnp.abs(taus - prev_tau) * rcfg.delta1 + rcfg.delta0) >= 1.0
-    flip = sol["route"] != prev_route
-    had_prev = prev_route >= 0
-    sol = dict(sol, route=jnp.where(flip & ~allowed & had_prev, prev_route, sol["route"]))
-    sol, bw_hist = enforce_bandwidth(sys, sol, difficulty, acc_req, rounds=rcfg.repair_rounds)
+    sol = dict(sol, route=apply_temporal_consistency(
+        sol["route"], prev_route, taus, prev_tau, rcfg
+    ))
+    sol, bw_hist = enforce_bandwidth(lat, sol, difficulty, acc_req,
+                                     rounds=rcfg.repair_rounds)
     sol["tau"] = taus
     sol["warm_route"] = warm_route
     sol["warm_r"] = warm_r

@@ -2,9 +2,14 @@
 
   PYTHONPATH=src python -m repro.launch.serve --rounds 4 --streams 8
 
-Video streams are synthesized, motion features drive the temporal gate, the
-two-stage robust router assigns (route, r, p, v), and token workloads
+Video streams are synthesized, motion features drive the temporal gate, and
+the *streaming* router engine (RouterState threaded through the jit-compiled
+``route_step``) assigns (route, r, p, v) per segment; token workloads
 (proportional to the chosen fidelity) are executed on real model pools.
+
+Each round consumes ``--segments-per-round`` segments per stream; the gate
+recurrence carries across segments and rounds (no window re-scan), and the
+last segment's solution drives the round's dispatch.
 """
 from __future__ import annotations
 
@@ -20,7 +25,7 @@ from repro.core.cost_model import SystemConfig
 from repro.core.features import feature_dim, segment_features
 from repro.core.gating import GateConfig, gate_specs
 from repro.core.robust import RobustProblem
-from repro.core.router import route
+from repro.core.router import RouterEngine
 from repro.data.video import VideoConfig, generate_stream, make_task_batch
 from repro.models.params import init_params
 from repro.serving.pools import make_tier_pools
@@ -30,6 +35,7 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=3)
     ap.add_argument("--streams", type=int, default=8)
+    ap.add_argument("--segments-per-round", type=int, default=8)
     ap.add_argument("--edge-arch", default="qwen1.5-0.5b")
     ap.add_argument("--cloud-arch", default="qwen3-8b")
     args = ap.parse_args()
@@ -40,21 +46,26 @@ def main():
     gparams = init_params(gate_specs(gcfg), jax.random.PRNGKey(0))
     pools = make_tier_pools(get_smoke_config(args.edge_arch), get_smoke_config(args.cloud_arch))
 
+    spr = args.segments_per_round
     vcfg = VideoConfig()
-    streams = [generate_stream(vcfg, n_segments=args.rounds * 8, rng=np.random.default_rng(i))
+    streams = [generate_stream(vcfg, n_segments=args.rounds * spr, rng=np.random.default_rng(i))
                for i in range(args.streams)]
     aq = jnp.asarray(make_task_batch(args.streams, "stable"))
-    prev_route = prev_tau = None
+    # (streams, total_segments, d) segment features, computed once per stream
+    dx_all = jnp.stack([
+        segment_features(jnp.asarray(fr), vcfg.frames_per_segment)
+        for fr, _ in streams
+    ])
+
+    engine = RouterEngine(prob, gcfg, gparams, n_streams=args.streams)
 
     for rnd in range(args.rounds):
-        dx = jnp.stack([
-            segment_features(jnp.asarray(fr), vcfg.frames_per_segment)[rnd * 8:(rnd + 1) * 8]
-            for fr, _ in streams
-        ])
-        z = jnp.asarray([m[rnd * 8:(rnd + 1) * 8].mean() for _, m in streams])
-        sol = route(prob, gcfg, gparams, dx, z, aq,
-                    prev_route=prev_route, prev_tau=prev_tau)
-        prev_route, prev_tau = sol["route"], sol["tau"]
+        z = jnp.asarray([m[rnd * spr:(rnd + 1) * spr].mean() for _, m in streams])
+        t_route = time.perf_counter()
+        # stream this round's segments through the stateful engine
+        for seg in range(rnd * spr, (rnd + 1) * spr):
+            sol = engine.step(dx_all[:, seg], z, aq)
+        route_ms = (time.perf_counter() - t_route) * 1e3
 
         t0 = time.perf_counter()
         for tier in (0, 1):
@@ -67,7 +78,8 @@ def main():
             pools[tier].serve_segment(toks)
         dt = time.perf_counter() - t0
         print(f"round {rnd}: routes={np.asarray(sol['route']).tolist()} "
-              f"taus={np.round(np.asarray(sol['tau']), 2).tolist()} wall={dt*1e3:.0f}ms")
+              f"taus={np.round(np.asarray(sol['tau']), 2).tolist()} "
+              f"route={route_ms:.0f}ms serve={dt*1e3:.0f}ms")
 
     for tier, pool in pools.items():
         s = pool.stats

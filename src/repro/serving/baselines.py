@@ -13,77 +13,76 @@
          temporal-consistency constraint + C6 bandwidth repair.
 
 Every method sees the same observables: (ẑ or z, A^q); none sees realized u.
+
+All methods search the shared :class:`DecisionLattice` — the flat (F, K)
+cost/feasibility layout and the (route, r, p) ↔ y index maps live there,
+not here.
 """
 from __future__ import annotations
 
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core.cost_model import SystemConfig, accuracy_table, cost_tables
+from repro.core.cost_model import SystemConfig
+from repro.core.lattice import DecisionLattice
 from repro.core.robust import RobustProblem, solve_ccg
 from repro.core.router import enforce_bandwidth
 
-
-def _nominal_tables(sys: SystemConfig, z):
-    """Joint (F = routes*res*fps, K) nominal cost + feasibility for tasks."""
-    c1, b2, _ = (np.asarray(t) for t in cost_tables(sys))
-    f = np.asarray(accuracy_table(sys, z))                 # (M, N, Z, K, 2)
-    feas = f >= 0  # placeholder; caller applies A_q
-    return c1, b2, f
+BIG = 1e9
 
 
-def _argmin_feasible(sys, z, aq, *, force_route=None, allowed_versions=None,
-                     margin=None):
-    """Vectorized nominal argmin over the decision lattice."""
-    c1, b2, f = _nominal_tables(sys, z)
-    m = z.shape[0]
+def _argmin_feasible(lat: DecisionLattice, z, aq, *, force_route=None,
+                     allowed_versions=None, margin=None):
+    """Vectorized nominal argmin over the decision lattice (host-side)."""
+    sys = lat.sys
+    m = len(z)
     if margin is None:
         margin = sys.acc_margin_nominal
-    total = c1[None, :, :, None, :] + b2[None, :, :, :, :]
-    # total: (M, N, Z, K, 2) broadcast of (N,Z,2) + (N,Z,K,2)
-    feas = f >= (aq + margin)[:, None, None, None, None]
+    f_flat = np.asarray(lat.accuracy_flat(jnp.asarray(z)))        # (M, F, K)
+    total = np.asarray(lat.c1_flat)[None, :, None] + np.asarray(lat.b2_flat)[None]
+    feas = f_flat >= (np.asarray(aq) + margin)[:, None, None]
     if force_route is not None:
-        mask_route = np.zeros((1, 1, 1, 1, 2), bool)
-        mask_route[..., force_route] = True
-        feas = feas & mask_route
+        y_route, _, _ = lat.unflatten_index(np.arange(lat.n_flat))
+        feas = feas & (y_route == force_route)[None, :, None]
     if allowed_versions is not None:
-        mv = np.zeros((1, 1, 1, sys.num_versions, 1), bool)
-        mv[:, :, :, allowed_versions, :] = True
+        mv = np.zeros((1, 1, sys.num_versions), bool)
+        mv[:, :, allowed_versions] = True
         feas = feas & mv
-    big = 1e9
-    obj = np.where(feas, np.broadcast_to(total, feas.shape), big)
+    obj = np.where(feas, np.broadcast_to(total, feas.shape), BIG)
     flat = obj.reshape(m, -1)
     idx = flat.argmin(axis=1)
     # fall back to max-accuracy config when nothing is feasible
-    none_ok = flat[np.arange(m), idx] >= big
+    none_ok = flat[np.arange(m), idx] >= BIG
     if none_ok.any():
-        acc_flat = f.reshape(m, -1)
+        acc_flat = f_flat.reshape(m, -1)
         idx[none_ok] = acc_flat[none_ok].argmax(axis=1)
-    n, zz, k = sys.n_res, sys.n_fps, sys.num_versions
-    r, rem = np.divmod(idx, zz * k * 2)
-    p, rem = np.divmod(rem, k * 2)
-    v, route = np.divmod(rem, 2)
+    y = idx // sys.num_versions
+    v = idx % sys.num_versions
+    route, r, p = lat.unflatten_index(y)
     return {"route": route, "r": r, "p": p, "v": v}
 
 
 # ---------------------------------------------------------------------------
 def a2_cloud_only(sys: SystemConfig):
+    lat = DecisionLattice.build(sys)
+
     def method(rnd, state):
-        return _argmin_feasible(sys, rnd["z"], rnd["aq"], force_route=1)
+        return _argmin_feasible(lat, rnd["z"], rnd["aq"], force_route=1)
     return method
 
 
 def jcab(sys: SystemConfig):
+    lat = DecisionLattice.build(sys)
     mid = sys.num_versions // 2
 
     def method(rnd, state):
         # joint config + bandwidth allocation, single mid-ladder model;
         # escalates version only when mid is infeasible everywhere
-        cfg = _argmin_feasible(sys, rnd["z"], rnd["aq"], allowed_versions=[mid])
-        f = np.asarray(accuracy_table(sys, rnd["z"]))
+        cfg = _argmin_feasible(lat, rnd["z"], rnd["aq"], allowed_versions=[mid])
+        f = np.asarray(lat.accuracy(jnp.asarray(rnd["z"])))
         ok = f[np.arange(len(rnd["z"])), cfg["r"], cfg["p"], cfg["v"], cfg["route"]] >= rnd["aq"]
         if (~ok).any():
-            esc = _argmin_feasible(sys, rnd["z"][~ok], rnd["aq"][~ok])
+            esc = _argmin_feasible(lat, rnd["z"][~ok], rnd["aq"][~ok])
             for k in cfg:
                 cfg[k][~ok] = esc[k]
         return cfg
@@ -91,19 +90,23 @@ def jcab(sys: SystemConfig):
 
 
 def rdap(sys: SystemConfig, ema: float = 0.7):
+    lat = DecisionLattice.build(sys)
+
     def method(rnd, state):
         z_prev = state.get("z_ema")
         z_hat = rnd["z"] if z_prev is None else ema * z_prev + (1 - ema) * rnd["z"]
         # NOTE: plans against the *forecast*, reality uses rnd["z"]
         state["z_ema"] = rnd["z"].copy()
-        return _argmin_feasible(sys, z_hat, rnd["aq"])
+        return _argmin_feasible(lat, z_hat, rnd["aq"])
     return method
 
 
 def sniper(sys: SystemConfig, n_profiles: int = 8):
+    lat = DecisionLattice.build(sys)
+
     def method(rnd, state):
         profiles = state.get("profiles")  # (n, 2): z, aq -> config rows
-        cfg = _argmin_feasible(sys, rnd["z"], rnd["aq"])
+        cfg = _argmin_feasible(lat, rnd["z"], rnd["aq"])
         if profiles is None:
             state["profiles"] = {
                 "key": np.stack([rnd["z"], rnd["aq"]], 1)[:n_profiles],
@@ -132,6 +135,7 @@ def r2evid(sys: SystemConfig, gate_cfg=None, gate_params=None, use_gate: bool = 
         config but a fixed mid-ladder version, nominal planning.
     """
     prob = RobustProblem.build(sys)
+    lat = prob.lat
 
     def method(rnd, state):
         z = jnp.asarray(rnd["z"])
@@ -141,20 +145,20 @@ def r2evid(sys: SystemConfig, gate_cfg=None, gate_params=None, use_gate: bool = 
             # static configuration, no edge-cloud partitioning
             fixed_r = np.full(m, sys.n_res // 2)
             fixed_p = np.full(m, sys.n_fps // 2)
-            f = np.asarray(accuracy_table(sys, rnd["z"]))
+            f = np.asarray(lat.accuracy(z))
             # robust version choice at the fixed config (worst-case u per v)
-            u = sys.u_dev * (0.6 + 0.4 * np.arange(sys.num_versions) / (sys.num_versions - 1))
-            _, b2, _ = (np.asarray(t) for t in cost_tables(sys))
+            u = np.asarray(lat.u_dev)
+            b2 = np.asarray(lat.b2)
             cost_v = b2[fixed_r[0], fixed_p[0], :, 0] * (1 + u)
             feas = f[np.arange(m), fixed_r, fixed_p, :, 0] >= rnd["aq"][:, None]
-            obj = np.where(feas, cost_v[None], 1e9)
+            obj = np.where(feas, cost_v[None], BIG)
             v = obj.argmin(1)
             bad = ~feas.any(1)
             v[bad] = f[bad][:, fixed_r[0], fixed_p[0], :, 0].argmax(1)
             return {"route": np.zeros(m, np.int64), "r": fixed_r, "p": fixed_p, "v": v}
         if not use_stage2:
             # adaptive config but single mid model, nominal planning
-            return _argmin_feasible(sys, rnd["z"], rnd["aq"],
+            return _argmin_feasible(lat, rnd["z"], rnd["aq"],
                                     allowed_versions=[sys.num_versions // 2])
         sol = solve_ccg(prob, z, aq)
         if use_gate:
@@ -170,7 +174,7 @@ def r2evid(sys: SystemConfig, gate_cfg=None, gate_params=None, use_gate: bool = 
                 sol = dict(sol, route=route)
             state["prev_route"] = np.asarray(sol["route"]).copy()
             state["prev_tau"] = np.asarray(tau_proxy).copy()
-        sol2, _ = enforce_bandwidth(sys, sol, z, aq)
+        sol2, _ = enforce_bandwidth(lat, sol, z, aq)
         return {k: np.asarray(sol2[k]) for k in ("route", "r", "p", "v")}
     return method
 

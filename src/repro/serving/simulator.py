@@ -7,7 +7,8 @@ realizes:
 
   transmission : data(r,p) / (tier bandwidth x fluctuation), shared fairly
   queueing     : tasks pack onto 4 edge servers / 1 cloud server,
-                 least-loaded-first (paper hardware: 4x Jetson NX + 1 Xeon)
+                 longest-processing-time first (paper hardware: 4x Jetson NX
+                 + 1 Xeon)
   compute      : version FLOPs / server throughput x adversarial-in-U jitter
   energy       : tier power x compute time + tx power x transmission
   accuracy     : accuracy_table(r, p, v, tier | z) + observation noise
@@ -15,15 +16,25 @@ realizes:
 Methods only see ẑ (their own difficulty estimate) and A^q; the realized u
 (compute deviation) is drawn inside the Γ-budget uncertainty set — robust
 methods should degrade gracefully, nominal ones overshoot their SLA.
+
+``realize`` is fully vectorized: per-config GFLOPs come from the precomputed
+lattice table and LPT packing runs as a compiled scan over sorted tasks
+(vectorized across servers, and across whole rounds in ``realize_batch``).
+``realize_reference`` keeps the original per-task Python loop as the parity
+oracle for tests and benchmarks.
 """
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import Callable, Dict
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cost_model import SystemConfig, accuracy_table, cost_tables
+from repro.core.cost_model import SystemConfig, version_flops
+from repro.core.lattice import DecisionLattice, gflops_table
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,12 +49,51 @@ class SimConfig:
     adversarial_u: bool = True         # realize u at a worst-ish pole of U
 
 
+@partial(jax.jit, static_argnames=("n_edge", "n_cloud"))
+def _lpt_queue(t_comp, route, n_edge: int, n_cloud: int):
+    """Longest-processing-time packing onto per-tier server pools.
+
+    t_comp/route: (..., M) — leading batch dims are vmapped over rounds.
+    Returns per-task queueing delay (load of the chosen server at placement).
+    The scan is over sorted tasks; the argmin over servers is vectorized.
+    """
+    def one_round(tc, rt):
+        order = jnp.argsort(-tc)                      # stable, longest first
+        tc_s = tc[order]
+        rt_s = rt[order]
+        server_tier = jnp.concatenate([
+            jnp.zeros((n_edge,), jnp.int32), jnp.ones((n_cloud,), jnp.int32)
+        ])
+
+        def body(loads, x):
+            t, tier = x
+            masked = jnp.where(server_tier == tier, loads, jnp.inf)
+            j = masked.argmin()
+            start = loads[j]
+            return loads.at[j].add(t), start
+
+        _, start_s = jax.lax.scan(
+            body, jnp.zeros((n_edge + n_cloud,), t_comp.dtype), (tc_s, rt_s)
+        )
+        return jnp.zeros_like(tc).at[order].set(start_s)
+
+    fn = one_round
+    for _ in range(t_comp.ndim - 1):
+        fn = jax.vmap(fn)
+    return fn(t_comp, route.astype(jnp.int32))
+
+
 class Simulator:
     def __init__(self, sys: SystemConfig, sim: SimConfig):
         self.sys = sys
         self.sim = sim
         self.rng = np.random.default_rng(sim.seed)
-        self.c1, self.b2, self.bw_tab = (np.asarray(t) for t in cost_tables(sys))
+        self.lat = DecisionLattice.build(sys)
+        self.c1, self.b2, self.bw_tab = (
+            np.asarray(self.lat.c1), np.asarray(self.lat.b2), np.asarray(self.lat.bw)
+        )
+        # (N, Z, K, 2) GFLOPs per segment, hoisted out of the per-task loop
+        self.gflops_tab = gflops_table(sys)
 
     # ------------------------------------------------------------------
     def sample_round(self):
@@ -65,14 +115,61 @@ class Simulator:
                 "bw_mult": bw_mult, "u": u}
 
     # ------------------------------------------------------------------
-    def realize(self, rnd, cfg):
-        """cfg: dict(route, r, p, v) int arrays (M,). Returns per-task metrics."""
+    def _realize_deterministic(self, rnd, cfg):
+        """Vectorized realization, minus observation noise (pure in rnd/cfg)."""
         sys, sim = self.sys, self.sim
         route = np.asarray(cfg["route"])
         r, p, v = (np.asarray(cfg[k]) for k in ("r", "p", "v"))
         m = route.shape[0]
 
         # --- transmission: fair-share the tier uplink among its tasks
+        bw = np.array([sys.edge_bw_mbps, sys.cloud_bw_mbps]) * rnd["bw_mult"]
+        data_mbit = self.bw_tab[r, p, route]
+        n_tier = np.maximum(np.bincount(route, minlength=2), 1)
+        share = bw[route] / n_tier[route]
+        t_trans = data_mbit / np.maximum(share, 1e-6)
+
+        # --- compute: precomputed GFLOPs table, no per-task Python loop
+        gf = self.gflops_tab[r, p, v, route]
+        thr = np.array([sys.edge_gflops, sys.cloud_gflops])
+        t_comp = gf / thr[route] * (1.0 + rnd["u"][v])
+
+        # --- queueing: compiled LPT packing
+        t_queue = np.asarray(_lpt_queue(
+            jnp.asarray(t_comp), jnp.asarray(route),
+            sim.n_edge_servers, sim.n_cloud_servers,
+        ))
+
+        delay = t_trans + t_queue + t_comp
+        power = np.array([sys.edge_power_w, sys.cloud_power_w])
+        energy = power[route] * t_comp + sys.transmit_power_w * t_trans
+        cost = delay + sys.beta * energy
+
+        acc_tab = np.asarray(self.lat.accuracy(jnp.asarray(rnd["z"])))
+        acc = acc_tab[np.arange(m), r, p, v, route]
+        return {"delay": delay, "energy": energy, "cost": cost,
+                "accuracy": acc, "route": route}
+
+    def realize(self, rnd, cfg):
+        """cfg: dict(route, r, p, v) int arrays (M,). Returns per-task metrics."""
+        met = self._realize_deterministic(rnd, cfg)
+        m = met["route"].shape[0]
+        acc = np.clip(met["accuracy"] + self.rng.normal(0, 0.008, m), 0, 1)
+        return dict(met, accuracy=acc,
+                    success=(acc >= rnd["aq"] - 1e-6).astype(np.float32))
+
+    # ------------------------------------------------------------------
+    def realize_reference(self, rnd, cfg, noise=None):
+        """Original per-task loop realization — parity oracle for ``realize``.
+
+        ``noise``: optional (M,) accuracy observation noise; when None it is
+        drawn from ``self.rng`` exactly like ``realize`` does.
+        """
+        sys, sim = self.sys, self.sim
+        route = np.asarray(cfg["route"])
+        r, p, v = (np.asarray(cfg[k]) for k in ("r", "p", "v"))
+        m = route.shape[0]
+
         bw = np.array([sys.edge_bw_mbps, sys.cloud_bw_mbps]) * rnd["bw_mult"]
         data_mbit = self.bw_tab[r, p, route]
         t_trans = np.zeros(m)
@@ -82,18 +179,16 @@ class Simulator:
             share = bw[tier] / n
             t_trans[sel] = data_mbit[sel] / np.maximum(share, 1e-6)
 
-        # --- compute + queueing: least-loaded-first packing
         gf = np.zeros(m)
         thr = np.array([sys.edge_gflops, sys.cloud_gflops])
         fps = np.asarray(sys.fps_options, np.float32)
         for i in range(m):
-            from repro.core.cost_model import version_flops
             gf[i] = version_flops(sys, int(route[i]), int(v[i]),
                                   int(sys.resolutions[r[i]])) * fps[p[i]] * sys.segment_sec
         t_comp = gf / thr[route] * (1.0 + rnd["u"][v])
         t_queue = np.zeros(m)
         servers = {0: np.zeros(sim.n_edge_servers), 1: np.zeros(sim.n_cloud_servers)}
-        order = np.argsort(-t_comp)  # longest-first packing
+        order = np.argsort(-t_comp, kind="stable")  # longest-first packing
         for i in order:
             q = servers[int(route[i])]
             j = int(q.argmin())
@@ -105,12 +200,65 @@ class Simulator:
         energy = power[route] * t_comp + sys.transmit_power_w * t_trans
         cost = delay + sys.beta * energy
 
-        acc_tab = np.asarray(accuracy_table(sys, rnd["z"]))
+        acc_tab = np.asarray(self.lat.accuracy(jnp.asarray(rnd["z"])))
         acc = acc_tab[np.arange(m), r, p, v, route]
-        acc = np.clip(acc + self.rng.normal(0, 0.008, m), 0, 1)
+        if noise is None:
+            noise = self.rng.normal(0, 0.008, m)
+        acc = np.clip(acc + noise, 0, 1)
         return {
             "delay": delay, "energy": energy, "cost": cost, "accuracy": acc,
             "success": (acc >= rnd["aq"] - 1e-6).astype(np.float32),
+            "route": route,
+        }
+
+    # ------------------------------------------------------------------
+    def realize_batch(self, rnds, cfgs):
+        """Vectorized realization of R whole rounds in one pass.
+
+        rnds: list of round dicts; cfgs: list of config dicts.  Returns
+        per-task metric arrays of shape (R, M).  The LPT packing runs as one
+        vmapped scan over all rounds.
+        """
+        sys, sim = self.sys, self.sim
+        route = np.stack([np.asarray(c["route"]) for c in cfgs])      # (R, M)
+        r = np.stack([np.asarray(c["r"]) for c in cfgs])
+        p = np.stack([np.asarray(c["p"]) for c in cfgs])
+        v = np.stack([np.asarray(c["v"]) for c in cfgs])
+        z = np.stack([rd["z"] for rd in rnds])                        # (R, M)
+        aq = np.stack([rd["aq"] for rd in rnds])
+        bw_mult = np.stack([rd["bw_mult"] for rd in rnds])            # (R, 2)
+        u = np.stack([rd["u"] for rd in rnds])                        # (R, K)
+        n_rounds, m = route.shape
+
+        bw = np.array([sys.edge_bw_mbps, sys.cloud_bw_mbps])[None] * bw_mult
+        data_mbit = self.bw_tab[r, p, route]
+        n_cloud = route.sum(axis=1)
+        n_tier = np.stack([m - n_cloud, n_cloud], axis=1)             # (R, 2)
+        n_tier = np.maximum(n_tier, 1)
+        rows = np.arange(n_rounds)[:, None]
+        share = bw[rows, route] / n_tier[rows, route]
+        t_trans = data_mbit / np.maximum(share, 1e-6)
+
+        gf = self.gflops_tab[r, p, v, route]
+        thr = np.array([sys.edge_gflops, sys.cloud_gflops])
+        t_comp = gf / thr[route] * (1.0 + u[rows, v])
+
+        t_queue = np.asarray(_lpt_queue(
+            jnp.asarray(t_comp), jnp.asarray(route),
+            sim.n_edge_servers, sim.n_cloud_servers,
+        ))
+
+        delay = t_trans + t_queue + t_comp
+        power = np.array([sys.edge_power_w, sys.cloud_power_w])
+        energy = power[route] * t_comp + sys.transmit_power_w * t_trans
+        cost = delay + sys.beta * energy
+
+        acc_tab = np.asarray(self.lat.accuracy(jnp.asarray(z)))       # (R, M, N, Z, K, 2)
+        acc = acc_tab[rows, np.arange(m)[None], r, p, v, route]
+        acc = np.clip(acc + self.rng.normal(0, 0.008, (n_rounds, m)), 0, 1)
+        return {
+            "delay": delay, "energy": energy, "cost": cost, "accuracy": acc,
+            "success": (acc >= aq - 1e-6).astype(np.float32),
             "route": route,
         }
 
@@ -127,3 +275,23 @@ class Simulator:
                 out[k].append(met[k].mean())
             out["cloud_frac"].append(met["route"].mean())
         return {k: float(np.mean(vs)) for k, vs in out.items()}
+
+    def run_batch(self, method: Callable, n_rounds=None) -> Dict[str, float]:
+        """Like ``run`` but realizes all rounds in one vectorized batch.
+
+        Method calls stay sequential (methods are stateful); only the
+        realization fans out.  Note the rng interleaving differs from ``run``
+        (all rounds are sampled before any noise is drawn), so results match
+        ``run`` in distribution, not bit-for-bit.
+        """
+        state = {}
+        rnds, cfgs = [], []
+        for _ in range(n_rounds or self.sim.n_rounds):
+            rnd = self.sample_round()
+            rnds.append(rnd)
+            cfgs.append(method(rnd, state))
+        met = self.realize_batch(rnds, cfgs)
+        out = {k: float(met[k].mean(axis=1).mean())
+               for k in ("delay", "energy", "cost", "accuracy", "success")}
+        out["cloud_frac"] = float(met["route"].mean(axis=1).mean())
+        return out

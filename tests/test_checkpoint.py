@@ -75,15 +75,16 @@ def test_corrupt_save_does_not_clobber(monkeypatch):
     tree = _tree(3)
     save(path, tree, extra={"v": 1})
 
-    import zstandard
+    import repro.checkpoint.manager as mgr
 
     class Boom(Exception):
         pass
 
-    def bad_compressor(*a, **k):
+    def bad_packb(*a, **k):
         raise Boom()
 
-    monkeypatch.setattr(zstandard, "ZstdCompressor", bad_compressor)
+    # fail inside the tmp-dir write, regardless of which codec is in use
+    monkeypatch.setattr(mgr.msgpack, "packb", bad_packb)
     with pytest.raises(Boom):
         save(path, _tree(4), extra={"v": 2})
     out, extra = restore(path, tree)

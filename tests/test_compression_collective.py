@@ -17,7 +17,10 @@ SCRIPT = textwrap.dedent(
     import jax
     import jax.numpy as jnp
     import numpy as np
-    from jax import shard_map
+    try:
+        from jax import shard_map
+    except ImportError:
+        from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
     from repro.train.compression import compressed_allreduce

@@ -131,34 +131,46 @@ def test_temporal_gate_cell(b, d, m, bb):
     np.testing.assert_allclose(gm, gmr, atol=1e-5, rtol=1e-5)
 
 
-from hypothesis import given, settings
-import hypothesis.strategies as st
+try:
+    from hypothesis import given, settings
+    import hypothesis.strategies as st
 
+    HAS_HYPOTHESIS = True
+except ImportError:  # optional dep: skip only the property-based test
+    HAS_HYPOTHESIS = False
 
-@settings(max_examples=10, deadline=None)
-@given(
-    b=st.integers(1, 3),
-    kv=st.sampled_from([1, 2, 4]),
-    g=st.sampled_from([1, 2, 4]),
-    nq=st.integers(1, 4),
-    d=st.sampled_from([32, 64]),
-    windowed=st.booleans(),
-)
-def test_flash_attention_property(b, kv, g, nq, d, windowed):
-    """Random GQA/window geometries: kernel == oracle (property-based)."""
-    from repro.kernels.flash_attention.kernel import flash_attention
-    from repro.kernels.flash_attention.ref import attention_ref
+if not HAS_HYPOTHESIS:
 
-    h = kv * g
-    s = 64 * nq
-    win = 32 if windowed else None
-    ks = jax.random.split(jax.random.PRNGKey(b * 100 + h * 10 + nq), 3)
-    q = jax.random.normal(ks[0], (b, h, s, d), jnp.float32)
-    k = jax.random.normal(ks[1], (b, kv, s, d), jnp.float32)
-    v = jax.random.normal(ks[2], (b, kv, s, d), jnp.float32)
-    out = flash_attention(q, k, v, window=win, block_q=64, block_k=64, interpret=True)
-    ref = attention_ref(q, k, v, window=win)
-    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_flash_attention_property():
+        pass
+
+else:
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        b=st.integers(1, 3),
+        kv=st.sampled_from([1, 2, 4]),
+        g=st.sampled_from([1, 2, 4]),
+        nq=st.integers(1, 4),
+        d=st.sampled_from([32, 64]),
+        windowed=st.booleans(),
+    )
+    def test_flash_attention_property(b, kv, g, nq, d, windowed):
+        """Random GQA/window geometries: kernel == oracle (property-based)."""
+        from repro.kernels.flash_attention.kernel import flash_attention
+        from repro.kernels.flash_attention.ref import attention_ref
+
+        h = kv * g
+        s = 64 * nq
+        win = 32 if windowed else None
+        ks = jax.random.split(jax.random.PRNGKey(b * 100 + h * 10 + nq), 3)
+        q = jax.random.normal(ks[0], (b, h, s, d), jnp.float32)
+        k = jax.random.normal(ks[1], (b, kv, s, d), jnp.float32)
+        v = jax.random.normal(ks[2], (b, kv, s, d), jnp.float32)
+        out = flash_attention(q, k, v, window=win, block_q=64, block_k=64, interpret=True)
+        ref = attention_ref(q, k, v, window=win)
+        np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
 
 
 def test_gate_kernel_matches_model_cell():

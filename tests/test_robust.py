@@ -1,10 +1,13 @@
 """Property-based tests for the two-stage robust optimizer (Eq. 2-10, Alg. 2)."""
 import dataclasses
 
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core.cost_model import SystemConfig, accuracy_table

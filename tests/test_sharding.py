@@ -1,7 +1,10 @@
 """Sharding rules: divisibility fitting, multi-pod adaptation (property-based)."""
-import hypothesis.strategies as st
 import jax
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+import hypothesis.strategies as st
 from hypothesis import given, settings
 from jax.sharding import PartitionSpec as P
 
