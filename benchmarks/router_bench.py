@@ -1,24 +1,35 @@
-"""Router engine benchmark: steady-state ``route_step`` latency + simulator
-realization throughput.
+"""Router engine benchmark: steady-state ``route_step`` latency, the fused
+scan drivers, the CCG sweep, and simulator realization throughput.
 
   PYTHONPATH=src python benchmarks/router_bench.py [--streams 64] [--steps 50]
+  PYTHONPATH=src python benchmarks/router_bench.py --json   # + BENCH_router.json
 
 Prints ``name,us_per_call,derived`` CSV lines (the repo benchmark contract):
 
   router/route_step      — steady-state latency of one jit-compiled streaming
-                           step (gate advance + CCG + C6 repair) and the
-                           derived segments/sec
+                           step (fused gate + warm-started CCG + C6 repair)
+                           and the derived segments/sec
+  router/route_scan_per_segment — amortized per-segment cost when a whole
+                           multi-segment round runs under one lax.scan
+  router/solve_ccg       — the hoisted CCG (M, P, F, K) sweep alone
   router/route_windowed  — the stateless windowed ``route`` on the same load
                            (re-scans the whole feature window each call)
-  sim/realize_vectorized — vectorized ``Simulator.realize``
+  engine/serve_scan_per_round — whole-run driver (route + realize per round,
+                           all rounds in one compiled scan)
+  sim/realize_vectorized — jnp ``Simulator.realize`` path
   sim/realize_reference  — original per-task loop, plus max metric deviation
                            between the two on a fixed seed
   sim/realize_batch_per_round — amortized per-round cost when whole rounds
                            are realized in one vmapped batch
+
+With ``--json`` the same rows are written to ``BENCH_router.json`` so every
+PR records the perf trajectory (CI uploads it as an artifact).
 """
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
 import time
 
 import jax
@@ -26,19 +37,26 @@ import jax.numpy as jnp
 import numpy as np
 
 
-def _timeit(fn, iters: int) -> float:
+def _timeit(fn, iters: int, chunks: int = 3) -> float:
+    """Best-of-``chunks`` mean latency in µs — the min over chunks is the
+    standard noise-robust estimator on shared machines."""
     fn()  # warm-up / compile
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        fn()
-    return (time.perf_counter() - t0) / iters * 1e6  # us
+    per_chunk = max(iters // chunks, 1)
+    best = float("inf")
+    for _ in range(chunks):
+        t0 = time.perf_counter()
+        for _ in range(per_chunk):
+            fn()
+        best = min(best, (time.perf_counter() - t0) / per_chunk)
+    return best * 1e6  # us
 
 
-def bench_route_step(streams: int, steps: int, window: int = 8):
+def bench_route_step(streams: int, steps: int, window: int = 8,
+                     scan_segments: int = 16):
     from repro.core.cost_model import SystemConfig
     from repro.core.features import feature_dim
     from repro.core.gating import GateConfig, gate_specs
-    from repro.core.robust import RobustProblem
+    from repro.core.robust import RobustProblem, solve_ccg
     from repro.core.router import RouterEngine, route
     from repro.models.params import init_params
 
@@ -60,6 +78,22 @@ def bench_route_step(streams: int, steps: int, window: int = 8):
     us_step = _timeit(step, steps)
     seg_per_s = streams / (us_step / 1e6)
 
+    dx_seq = jnp.asarray(
+        rng.normal(size=(scan_segments, streams, feature_dim())), jnp.float32)
+
+    def scan_round():
+        sols = engine.step_many(dx_seq, z, aq)
+        jax.block_until_ready(sols["route"])
+
+    us_scan = _timeit(scan_round, max(steps // 4, 3)) / scan_segments
+    scan_seg_per_s = streams / (us_scan / 1e6)
+
+    def ccg():
+        sol = solve_ccg(prob, z, aq)
+        jax.block_until_ready(sol["route"])
+
+    us_ccg = _timeit(ccg, steps)
+
     dx_win = jnp.asarray(rng.normal(size=(streams, window, feature_dim())), jnp.float32)
 
     def windowed():
@@ -69,8 +103,46 @@ def bench_route_step(streams: int, steps: int, window: int = 8):
     us_win = _timeit(windowed, max(steps // 4, 3))
     return [
         ("router/route_step", us_step, f"segments_per_s={seg_per_s:.0f}"),
+        ("router/route_scan_per_segment", us_scan,
+         f"segments_per_s={scan_seg_per_s:.0f},scan_len={scan_segments}"),
+        ("router/solve_ccg", us_ccg, f"tasks={streams}"),
         ("router/route_windowed", us_win, f"window={window}"),
     ]
+
+
+def bench_serve_scan(streams: int, rounds: int, iters: int = 5):
+    from repro.core.cost_model import SystemConfig
+    from repro.core.features import feature_dim
+    from repro.core.gating import GateConfig, gate_specs
+    from repro.core.robust import RobustProblem
+    from repro.core.router import init_router_state
+    from repro.models.params import init_params
+    from repro.serving.scan import serve_scan
+    from repro.serving.simulator import SimConfig, Simulator
+
+    sys_ = SystemConfig()
+    prob = RobustProblem.build(sys_)
+    gcfg = GateConfig(d_feature=feature_dim())
+    gparams = init_params(gate_specs(gcfg), jax.random.PRNGKey(0))
+    sim = Simulator(sys_, SimConfig(n_tasks=streams, seed=5, bw_fluctuation=0.2))
+    rnds = [sim.sample_round() for _ in range(rounds)]
+    rng = np.random.default_rng(1)
+    dx_seq = jnp.asarray(rng.normal(size=(rounds, streams, feature_dim())), jnp.float32)
+    z = jnp.asarray(np.stack([r["z"] for r in rnds]), jnp.float32)
+    aq = jnp.asarray(np.stack([r["aq"] for r in rnds]), jnp.float32)
+    bwm = jnp.asarray(np.stack([r["bw_mult"] for r in rnds]), jnp.float32)
+    u = jnp.asarray(np.stack([r["u"] for r in rnds]), jnp.float32)
+    state = init_router_state(gcfg, streams)
+
+    def run():
+        _, mets = serve_scan(prob, gcfg, gparams, state, dx_seq, z, aq, bwm, u,
+                             n_edge=sim.sim.n_edge_servers,
+                             n_cloud=sim.sim.n_cloud_servers)
+        jax.block_until_ready(mets["cost"])
+
+    us = _timeit(run, iters) / rounds
+    return [("engine/serve_scan_per_round", us,
+             f"rounds={rounds},streams={streams}")]
 
 
 def bench_realize(n_tasks: int, iters: int = 20):
@@ -114,13 +186,34 @@ def main():
     ap.add_argument("--streams", type=int, default=64)
     ap.add_argument("--steps", type=int, default=30)
     ap.add_argument("--tasks", type=int, default=200)
+    ap.add_argument("--scan-rounds", type=int, default=16)
+    ap.add_argument("--json", action="store_true",
+                    help="also write BENCH_router.json next to the repo root")
     args = ap.parse_args()
 
+    rows = []
+    rows += bench_route_step(args.streams, args.steps)
+    rows += bench_serve_scan(args.streams, args.scan_rounds)
+    rows += bench_realize(args.tasks)
+
     print("name,us_per_call,derived")
-    for row in bench_route_step(args.streams, args.steps):
-        print(f"{row[0]},{row[1]:.1f},{row[2]}")
-    for row in bench_realize(args.tasks):
-        print(f"{row[0]},{row[1]:.1f},{row[2]}")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+    if args.json:
+        out = {
+            "config": {"streams": args.streams, "steps": args.steps,
+                       "tasks": args.tasks, "scan_rounds": args.scan_rounds,
+                       "backend": jax.default_backend()},
+            "benchmarks": [
+                {"name": name, "us_per_call": round(us, 2), "derived": derived,
+                 "calls_per_s": round(1e6 / max(us, 1e-9), 1)}
+                for name, us, derived in rows
+            ],
+        }
+        path = pathlib.Path(__file__).resolve().parent.parent / "BENCH_router.json"
+        path.write_text(json.dumps(out, indent=2) + "\n")
+        print(f"wrote {path}")
 
 
 if __name__ == "__main__":

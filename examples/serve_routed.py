@@ -1,6 +1,7 @@
-"""Routed serving: the stateful streaming router engine (gate recurrence +
-robust two-stage selection per segment) dispatching batched requests onto
-live edge/cloud model pools.
+"""Routed serving: the stateful streaming router engine (fused batched gate
+recurrence + warm-started robust two-stage selection per segment) dispatching
+batched requests onto live edge/cloud model pools.  Each round's segments run
+under one compiled ``lax.scan`` (``RouterEngine.step_many``).
 
   PYTHONPATH=src python examples/serve_routed.py
 """

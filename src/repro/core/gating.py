@@ -19,6 +19,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.temporal_gate.ops import gate_cell
 from repro.models.params import ParamSpec
 
 
@@ -78,6 +79,71 @@ def gate_step(cfg: GateConfig, p, state: GateState, dx):
     tau = jax.nn.sigmoid(h @ p["w_o"] + p["b_o"])[0]
     new_state = GateState(h=h, var_buf=buf, var_idx=state.var_idx + 1)
     return new_state, (tau, g.mean())
+
+
+# ---------------------------------------------------------------------------
+# Fused batched streaming step (the serving hot path)
+#
+# ``gate_step`` re-scans the whole (T, d) ring buffer every step to get the
+# volatility Var(Δx_{t-T:t}); at fleet scale that is an O(T·d) read per
+# stream per tick.  The batched state below carries running Σx / Σx² over the
+# buffer instead, so each step is O(d): subtract the evicted frame, add the
+# new one.  The six-matmul cell itself dispatches to the fused Pallas
+# ``gate_cell`` on TPU (pure-jnp ref elsewhere) — one VMEM-resident pass for
+# the whole (M, d) stream batch.
+# ---------------------------------------------------------------------------
+class GateBatchState(NamedTuple):
+    h: jnp.ndarray          # (M, m) hidden
+    var_buf: jnp.ndarray    # (M, T, d) Δx ring buffer (holds the evictees)
+    var_idx: jnp.ndarray    # (M,) int32
+    var_sum: jnp.ndarray    # (M, d) running Σ Δx over the buffer
+    var_sumsq: jnp.ndarray  # (M, d) running Σ Δx² over the buffer
+
+
+def init_batch_state(cfg: GateConfig, n_streams: int) -> GateBatchState:
+    return GateBatchState(
+        h=jnp.zeros((n_streams, cfg.d_hidden), jnp.float32),
+        var_buf=jnp.zeros((n_streams, cfg.var_window, cfg.d_feature), jnp.float32),
+        var_idx=jnp.zeros((n_streams,), jnp.int32),
+        var_sum=jnp.zeros((n_streams, cfg.d_feature), jnp.float32),
+        var_sumsq=jnp.zeros((n_streams, cfg.d_feature), jnp.float32),
+    )
+
+
+def gate_step_batch(cfg: GateConfig, p, state: GateBatchState, dx, *,
+                    force: str = "auto"):
+    """One fused recurrence step for all streams. dx: (M, d).
+
+    Returns ``(new_state, (tau (M,), g_mean (M,)))`` — the batched equivalent
+    of ``vmap(gate_step)`` with the volatility maintained incrementally.
+    """
+    t = cfg.var_window
+    slot = jnp.mod(state.var_idx, t)                              # (M,)
+    old = jnp.take_along_axis(state.var_buf, slot[:, None, None], axis=1)[:, 0]
+    var_sum = state.var_sum + dx - old                            # (M, d)
+    var_sumsq = state.var_sumsq + dx * dx - old * old
+    hit = jnp.arange(t)[None, :] == slot[:, None]                 # (M, T)
+    buf = jnp.where(hit[:, :, None], dx[:, None, :], state.var_buf)
+    # resync the running sums against the exact ring buffer once per window:
+    # the incremental updates random-walk float32 rounding error over long
+    # serving runs; the buffer is exact, so this bounds the drift to T steps
+    # at an amortized O(d) cost (streams advance in lockstep, and if they
+    # don't, an off-phase resync is still exact).  lax.cond keeps the (T, d)
+    # reduction off the trace-hot path on non-resync steps.
+    var_sum, var_sumsq = jax.lax.cond(
+        (state.var_idx[0] + 1) % t == 0,
+        lambda: (buf.sum(axis=1), jnp.square(buf).sum(axis=1)),
+        lambda: (var_sum, var_sumsq),
+    )
+    mean = var_sum / t
+    vol = jnp.maximum(var_sumsq / t - mean * mean, 0.0).mean(axis=-1)  # (M,)
+
+    h, tau, g_mean = gate_cell(dx, state.h, vol, p, force=force)
+    new_state = GateBatchState(
+        h=h, var_buf=buf, var_idx=state.var_idx + 1,
+        var_sum=var_sum, var_sumsq=var_sumsq,
+    )
+    return new_state, (tau, g_mean)
 
 
 def gate_scan(cfg: GateConfig, p, dxs, state: GateState | None = None):

@@ -49,19 +49,31 @@ def _poles(num_versions: int, gamma: int):
 
 @partial(
     jax.tree_util.register_dataclass,
-    data_fields=("lat", "poles"),
+    data_fields=("lat", "poles", "rec_table"),
     meta_fields=(),
 )
 @dataclasses.dataclass(frozen=True)
 class RobustProblem:
     lat: DecisionLattice
     poles: jnp.ndarray     # (P, K) pole indicators
+    # (P, F, 2^K) recourse lookup: min_v b2·(1+u_v) over the feasible-version
+    # subset encoded as a bitmask.  Task-independent (depends only on the
+    # lattice costs, poles, and ũ), built once; the per-task CCG sweep then
+    # reduces to encoding its (F, K) feasibility mask and gathering.
+    rec_table: jnp.ndarray
 
     @classmethod
     def build(cls, sys: SystemConfig):
         lat = DecisionLattice.build(sys)
         poles = _poles(sys.num_versions, sys.gamma)
-        return cls(lat=lat, poles=poles)
+        u_all = poles * lat.u_dev                             # (P, K)
+        b2_scaled = lat.b2_flat[None] * (1.0 + u_all[:, None, :])  # (P, F, K)
+        k = sys.num_versions
+        masks = ((jnp.arange(2 ** k)[:, None] >> jnp.arange(k)[None]) & 1).astype(bool)
+        rec_table = jnp.where(
+            masks[None, None], b2_scaled[:, :, None, :], BIG
+        ).min(axis=-1)                                        # (P, F, 2^K)
+        return cls(lat=lat, poles=poles, rec_table=rec_table)
 
     @property
     def sys(self) -> SystemConfig:
@@ -82,19 +94,24 @@ class RobustProblem:
         return self.lat.b2
 
 
-def recourse_value(prob: RobustProblem, feas, b2_yrp, pole):
-    """min_v (1+u_v)·b2_v over feasible v for one pole. b2_yrp: (K,)."""
-    u = pole * prob.u_dev
-    vals = jnp.where(feas, b2_yrp * (1.0 + u), BIG)
-    return vals.min(), vals.argmin()
-
-
 @partial(jax.jit, static_argnames=("max_iters",))
-def solve_ccg(prob: RobustProblem, difficulty, acc_req, max_iters: int = 8, theta: float = 1e-4):
+def solve_ccg(prob: RobustProblem, difficulty, acc_req, max_iters: int = 8,
+              theta: float = 1e-4, warm_y=None):
     """Alg. 2 for a batch of tasks.
 
     difficulty: (M,) content difficulty z; acc_req: (M,) A^q_i.
     Returns dict with y (route), r, p, v indices + objective bounds.
+
+    The scaled recourse table b2·(1+u) over all poles is task-independent, so
+    it is hoisted out of the per-task vmap entirely: ``RobustProblem`` caches
+    its mins over every feasible-version subset, and each task just encodes
+    its (F, K) feasibility mask as a bitmask and gathers.
+
+    ``warm_y``: optional (M,) flat first-stage warm starts (the Stage-1
+    route).  When given, each task's scenario set is seeded with the exact
+    worst-case pole of its warm start and O_up starts at that configuration's
+    robust cost — a valid upper bound whenever the warm start is feasible —
+    so typical tasks converge in fewer CCG iterations.
     """
     lat = prob.lat
     sys = lat.sys
@@ -102,21 +119,33 @@ def solve_ccg(prob: RobustProblem, difficulty, acc_req, max_iters: int = 8, thet
     f_flat, feas_f = lat.feasible_flat(difficulty, acc_req, sys.acc_margin_robust)
     c1 = lat.c1_flat                                  # (F,)
     b2 = lat.b2_flat                                  # (F, K)
+    # hoisted recourse: the scaled b2·(1+u) mins live in the precomputed
+    # task-independent (P, F, 2^K) table — each task only encodes its (F, K)
+    # feasibility mask as a bitmask and gathers, no per-task (P, F, K) sweep.
+    pow2 = 2 ** jnp.arange(sys.num_versions)
+    code = (feas_f * pow2[None, None]).sum(axis=-1)   # (M, F) subset codes
+    rec_all_m = jnp.take_along_axis(
+        prob.rec_table[None], code[:, None, :, None], axis=-1
+    )[..., 0]                                         # (M, P, F)
+    if warm_y is None:
+        warm_y = -jnp.ones(feas_f.shape[0], jnp.int32)
 
-    def per_task(feas_i):
+    def per_task(feas_i, rec_all, warm_i):
         # any first-stage option with no feasible v is excluded from MP1
         fs_ok = feas_i.any(axis=-1)                      # (F,)
 
-        def pole_recourse(u_mask):
-            u = u_mask * prob.u_dev                      # (K,)
-            vals = jnp.where(feas_i, b2 * (1.0 + u), BIG)  # (F, K)
-            return vals.min(axis=-1)                     # (F,)
-
-        # worst-case over ALL poles for every F (used for oracle + SP)
-        rec_all = jax.vmap(pole_recourse)(prob.poles)    # (P, F)
+        # warm start: seed the scenario set with the warm y's worst pole and
+        # start O_up at its robust cost (only when the warm start is usable)
+        use_warm = (warm_i >= 0) & fs_ok[jnp.maximum(warm_i, 0)]
+        wy = jnp.maximum(warm_i, 0)
+        warm_pole = rec_all[:, wy].argmax()
+        warm_up = c1[wy] + rec_all[warm_pole, wy]
+        init_mask = jnp.zeros((prob.poles.shape[0],)).at[warm_pole].set(
+            jnp.where(use_warm, 1.0, 0.0))
+        init_up = jnp.where(use_warm, warm_up, BIG)
 
         def body(carry):
-            it, scen_mask, o_up, _, _, done = carry
+            it, scen_mask, o_up, _, y_best, done = carry
             # MP1: eta(y) = max over generated scenarios of the recourse value
             active = jnp.where(scen_mask[:, None] > 0, rec_all, -BIG)
             eta = jnp.where(scen_mask.sum() > 0, active.max(axis=0), 0.0)  # (F,)
@@ -127,18 +156,22 @@ def solve_ccg(prob: RobustProblem, difficulty, acc_req, max_iters: int = 8, thet
             sp_vals = rec_all[:, y_star]                 # (P,)
             worst_pole = sp_vals.argmax()
             q = sp_vals[worst_pole]
+            # the returned decision is the INCUMBENT achieving O_up, not the
+            # last master argmin — the master's obj only lower-bounds the
+            # robust cost, so a θ-tied y_star may be worse than the incumbent
+            # (matters when the warm seed makes convergence fire early)
+            y_best = jnp.where(c1[y_star] + q < o_up, y_star, y_best)
             o_up = jnp.minimum(o_up, c1[y_star] + q)
             done = (o_up - o_down) <= theta
             scen_mask = scen_mask.at[worst_pole].set(1.0)  # add scenario column
-            return it + 1, scen_mask, o_up, o_down, y_star, done
+            return it + 1, scen_mask, o_up, o_down, y_best, done
 
         def cond(carry):
             it, _, _, _, _, done = carry
             return (it < max_iters) & ~done
 
-        p = prob.poles.shape[0]
-        init = (0, jnp.zeros((p,)), jnp.asarray(BIG), jnp.asarray(-BIG),
-                jnp.asarray(0, dtype=jnp.int32), jnp.asarray(False))
+        init = (0, init_mask, init_up, jnp.asarray(-BIG),
+                wy, jnp.asarray(False))
         it, scen_mask, o_up, o_down, y_star, done = jax.lax.while_loop(cond, body, init)
 
         # final recourse: worst pole for chosen y, then v*
@@ -149,7 +182,7 @@ def solve_ccg(prob: RobustProblem, difficulty, acc_req, max_iters: int = 8, thet
         v_star = vals.argmin()
         return y_star, v_star, o_up, o_down, it
 
-    y_f, v_star, o_up, o_down, iters = jax.vmap(per_task)(feas_f)
+    y_f, v_star, o_up, o_down, iters = jax.vmap(per_task)(feas_f, rec_all_m, warm_y)
     # graceful margin relaxation: tasks infeasible *with* the robust margin
     # fall back to the max-accuracy configuration (which also covers margin-
     # free feasibility when any config clears A^q exactly)
@@ -164,6 +197,44 @@ def solve_ccg(prob: RobustProblem, difficulty, acc_req, max_iters: int = 8, thet
         "route": route, "r": r_idx, "p": p_idx, "v": v_star,
         "o_up": o_up, "o_down": o_down, "iters": iters, "infeasible": none_ok,
     }
+
+
+def solve_ccg_sharded(prob: RobustProblem, difficulty, acc_req, mesh,
+                      axis: str = "data", max_iters: int = 8,
+                      theta: float = 1e-4, warm_y=None):
+    """``solve_ccg`` with the task batch M split across devices.
+
+    The CCG sweep is embarrassingly parallel over tasks (the hoisted
+    (P, F, K) recourse table is replicated; only the per-task feasibility
+    masks and loop state are local), so a ``shard_map`` over the mesh's data
+    axis scales the sweep linearly with device count.  The batch is padded to
+    a multiple of the axis size with trivially-feasible dummies and sliced
+    back, so any M works.  Decisions are identical to the single-device path.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.sharding.compat import shard_map
+
+    m = difficulty.shape[0]
+    n_dev = mesh.shape[axis]
+    pad = (-m) % n_dev
+    difficulty = jnp.concatenate([difficulty, jnp.zeros((pad,), difficulty.dtype)])
+    acc_req = jnp.concatenate([acc_req, jnp.zeros((pad,), acc_req.dtype)])
+    if warm_y is None:
+        warm_y = -jnp.ones((m,), jnp.int32)
+    warm_y = jnp.concatenate([warm_y, -jnp.ones((pad,), jnp.int32)])
+
+    def shard_fn(pb, z, aq, wy):
+        return solve_ccg(pb, z, aq, max_iters=max_iters, theta=theta, warm_y=wy)
+
+    # check_vma=False: the CCG while_loop has no replication rule, but every
+    # operand is either axis-sharded or an explicitly replicated input
+    sol = shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(P(), P(axis), P(axis), P(axis)),
+        out_specs=P(axis), check_vma=False,
+    )(prob, difficulty, acc_req, warm_y)
+    return {k: v[:m] for k, v in sol.items()}
 
 
 def exact_oracle(prob: RobustProblem, difficulty, acc_req):

@@ -32,7 +32,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.cost_model import SystemConfig
-from repro.core.gating import GateConfig, GateState, gate_scan_batch, gate_step, init_state
+from repro.core.gating import (
+    GateBatchState,
+    GateConfig,
+    gate_scan_batch,
+    gate_step_batch,
+    init_batch_state,
+)
 from repro.core.lattice import DecisionLattice
 from repro.core.robust import BIG, RobustProblem, solve_ccg
 
@@ -92,7 +98,13 @@ def stage1_configure(sys_or_lat, taus, difficulty, acc_req, prev_route, prev_tau
 def enforce_bandwidth(sys_or_lat, sol, difficulty, acc_req, total_budget=None,
                       rounds: int = 8):
     """Demote (r, p) of over-budget tasks with the largest bandwidth draw that
-    remain feasible after demotion; fixed-round vectorized repair."""
+    remain feasible after demotion; fixed-round vectorized repair.
+
+    Each round demotes the *top-k* largest-gain tasks at once — exactly the
+    prefix (by descending gain) needed to clear the excess over the budget —
+    instead of one scalar ``.at[pick].set`` demotion per round, so the repair
+    converges in ~#fidelity-levels rounds independent of the batch size M.
+    """
     lat = _as_lattice(sys_or_lat)
     sys = lat.sys
     bw_tab = lat.bw                                      # (N, Z, 2) Mbps
@@ -100,27 +112,34 @@ def enforce_bandwidth(sys_or_lat, sol, difficulty, acc_req, total_budget=None,
     budget = sys.total_bw_mbps if total_budget is None else total_budget
 
     margin = sys.acc_margin_robust
+    m = sol["r"].shape[0]
 
     def round_fn(state, _):
         r, p = state
         bw = bw_tab[r, p, sol["route"]]
-        over = bw.sum() > budget
+        excess = bw.sum() - budget
         # candidate demotion: prefer dropping fps, then resolution
         p_dn = jnp.maximum(p - 1, 0)
         r_dn = jnp.maximum(r - 1, 0)
-        f_pdn = f[jnp.arange(r.shape[0]), r, p_dn, sol["v"], sol["route"]]
-        f_rdn = f[jnp.arange(r.shape[0]), r_dn, p, sol["v"], sol["route"]]
+        f_pdn = f[jnp.arange(m), r, p_dn, sol["v"], sol["route"]]
+        f_rdn = f[jnp.arange(m), r_dn, p, sol["v"], sol["route"]]
         can_p = (p > 0) & (f_pdn >= acc_req + margin)
         can_r = (r > 0) & (f_rdn >= acc_req + margin)
         gain_p = bw - bw_tab[r, p_dn, sol["route"]]
         gain_r = bw - bw_tab[r_dn, p, sol["route"]]
         gain = jnp.where(can_p, gain_p, jnp.where(can_r, gain_r, -BIG))
-        pick = gain.argmax()
-        do = over & (gain[pick] > 0)
-        use_p = can_p[pick]
-        r = r.at[pick].set(jnp.where(do & ~use_p, r_dn[pick], r[pick]))
-        p = p.at[pick].set(jnp.where(do & use_p, p_dn[pick], p[pick]))
-        return (r, p), bw.sum()
+        # top-k demotion: in descending-gain order, demote tasks while the
+        # cumulative reclaimed bandwidth is still short of the excess
+        order = jnp.argsort(-gain)
+        gain_sorted = gain[order]
+        cum_before = jnp.concatenate(
+            [jnp.zeros((1,), gain.dtype), jnp.cumsum(gain_sorted)[:-1]]
+        )
+        demote_sorted = (excess > 0) & (cum_before < excess) & (gain_sorted > 0)
+        demote = jnp.zeros((m,), bool).at[order].set(demote_sorted)
+        r = jnp.where(demote & ~can_p, r_dn, r)
+        p = jnp.where(demote & can_p, p_dn, p)
+        return (r, p), excess + budget
 
     (r, p), bw_hist = jax.lax.scan(round_fn, (sol["r"], sol["p"]), None, length=rounds)
     return dict(sol, r=r, p=p), bw_hist
@@ -139,15 +158,14 @@ class RouterState:
     """Carry of the streaming router: per-stream gate recurrence + history."""
     prev_route: jnp.ndarray   # (M,) int32, -1 = no previous segment
     prev_tau: jnp.ndarray     # (M,) float32
-    gate: GateState           # batched: h (M, m), var_buf (M, T, d), var_idx (M,)
+    gate: GateBatchState      # fused batch: h (M, m), ring buffer + running Σ/Σ²
 
 
 def init_router_state(gate_cfg: GateConfig, n_streams: int) -> RouterState:
-    gate = jax.vmap(lambda _: init_state(gate_cfg))(jnp.arange(n_streams))
     return RouterState(
         prev_route=-jnp.ones((n_streams,), jnp.int32),
         prev_tau=jnp.zeros((n_streams,), jnp.float32),
-        gate=gate,
+        gate=init_batch_state(gate_cfg, n_streams),
     )
 
 
@@ -164,19 +182,23 @@ def route_step(
 ):
     """One fully jit-compiled streaming step: (state, segment batch) -> (state, sol).
 
-    Advances the gate recurrence by one segment (no window re-scan), runs the
-    two-stage robust selection, applies the temporal-consistency constraint
-    against the carried history, and repairs the C6 bandwidth budget.
+    Advances the fused batched gate by one segment (O(d) incremental
+    volatility, Pallas cell on TPU), runs the two-stage robust selection with
+    the Stage-1 configuration seeding the CCG scenario set (true warm start),
+    applies the temporal-consistency constraint against the carried history,
+    and repairs the C6 bandwidth budget.
     """
     lat = prob.lat
-    new_gate, (taus, _gate_means) = jax.vmap(
-        lambda s, x: gate_step(gate_cfg, gate_params, s, x)
-    )(state.gate, dx)
+    new_gate, (taus, _gate_means) = gate_step_batch(
+        gate_cfg, gate_params, state.gate, dx
+    )
 
     warm_route, warm_r = stage1_configure(
         lat, taus, difficulty, acc_req, state.prev_route, state.prev_tau, rcfg
     )
-    sol = solve_ccg(prob, difficulty, acc_req)
+    # Stage-1 picks (route, r) at max fps — seed CCG with that configuration
+    warm_y = lat.flatten_index(warm_route, warm_r, lat.sys.n_fps - 1)
+    sol = solve_ccg(prob, difficulty, acc_req, warm_y=warm_y.astype(jnp.int32))
     # Stage-1 consistency overrides Stage-2 route flips that the gate forbids
     sol = dict(sol, route=apply_temporal_consistency(
         sol["route"], state.prev_route, taus, state.prev_tau, rcfg
@@ -193,6 +215,37 @@ def route_step(
         gate=new_gate,
     )
     return new_state, sol
+
+
+@partial(jax.jit, static_argnames=("gate_cfg", "rcfg"))
+def route_scan(
+    prob: RobustProblem,
+    gate_cfg: GateConfig,
+    gate_params,
+    state: RouterState,
+    dx_seq,               # (S, M, d) segment features, scanned over S
+    difficulty,           # (M,) or (S, M)
+    acc_req,              # (M,) or (S, M)
+    rcfg: RouterConfig = RouterConfig(),
+):
+    """Run ``route_step`` over S segments under one ``lax.scan``.
+
+    The whole multi-segment round compiles to a single program — no Python
+    loop, no per-segment dispatch overhead.  Returns ``(state, sols)`` where
+    every entry of ``sols`` is stacked with a leading S axis.
+    """
+    s = dx_seq.shape[0]
+    if difficulty.ndim == 1:
+        difficulty = jnp.broadcast_to(difficulty, (s,) + difficulty.shape)
+    if acc_req.ndim == 1:
+        acc_req = jnp.broadcast_to(acc_req, (s,) + acc_req.shape)
+
+    def body(st, xs):
+        dx, z, aq = xs
+        st, sol = route_step(prob, gate_cfg, gate_params, st, dx, z, aq, rcfg=rcfg)
+        return st, sol
+
+    return jax.lax.scan(body, state, (dx_seq, difficulty, acc_req))
 
 
 class RouterEngine:
@@ -217,6 +270,18 @@ class RouterEngine:
             dx, difficulty, acc_req, rcfg=self.rcfg,
         )
         return sol
+
+    def step_many(self, dx_seq, difficulty, acc_req):
+        """Consume S segments in one compiled ``lax.scan`` (``route_scan``).
+
+        dx_seq: (S, M, d).  Returns the stacked solutions; the last entry is
+        the current segment's solution.
+        """
+        self.state, sols = route_scan(
+            self.prob, self.gate_cfg, self.gate_params, self.state,
+            dx_seq, difficulty, acc_req, rcfg=self.rcfg,
+        )
+        return sols
 
     def reset(self, n_streams: int | None = None):
         m = n_streams if n_streams is not None else self.state.prev_route.shape[0]
@@ -247,10 +312,14 @@ def route(
     taus_seq, gates, _ = gate_scan_batch(gate_cfg, gate_params, dx_segments)
     taus = taus_seq[:, -1]
 
+    # Stage-1 output is consumed twice: as the CCG warm start (scenario-set
+    # seed, same as the streaming path) and as the warm_route/warm_r
+    # diagnostics in the returned solution.
     warm_route, warm_r = stage1_configure(
         lat, taus, difficulty, acc_req, prev_route, prev_tau, rcfg
     )
-    sol = solve_ccg(prob, difficulty, acc_req)
+    warm_y = lat.flatten_index(warm_route, warm_r, lat.sys.n_fps - 1)
+    sol = solve_ccg(prob, difficulty, acc_req, warm_y=warm_y.astype(jnp.int32))
     # Stage-1 consistency overrides Stage-2 route flips that the gate forbids
     sol = dict(sol, route=apply_temporal_consistency(
         sol["route"], prev_route, taus, prev_tau, rcfg

@@ -4,6 +4,7 @@ from __future__ import annotations
 from functools import partial
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels.temporal_gate.kernel import gate_cell as _pallas
 from repro.kernels.temporal_gate.ref import gate_cell_ref as _ref
@@ -15,7 +16,22 @@ def _on_tpu() -> bool:
 
 @partial(jax.jit, static_argnames=("block_b", "force"))
 def gate_cell(dx, h, vol, p, *, block_b: int = 256, force: str = "auto"):
+    """Fused gating cell for a (B, d) stream batch -> (h_new, tau, g_mean).
+
+    ``force``: "auto" picks Pallas on TPU and the jnp ref elsewhere;
+    "pallas"/"ref" override (Pallas runs in interpret mode off-TPU).  The
+    batch is padded up to a multiple of the kernel block so any B works.
+    """
     use_pallas = force == "pallas" or (force == "auto" and _on_tpu())
-    if use_pallas:
-        return _pallas(dx, h, vol, p, block_b=block_b, interpret=not _on_tpu())
-    return _ref(dx, h, vol, p)
+    if not use_pallas:
+        return _ref(dx, h, vol, p)
+    b = dx.shape[0]
+    bb = min(block_b, b)
+    pad = (-b) % bb
+    if pad:
+        dx = jnp.concatenate([dx, jnp.zeros((pad,) + dx.shape[1:], dx.dtype)])
+        h = jnp.concatenate([h, jnp.zeros((pad,) + h.shape[1:], h.dtype)])
+        vol = jnp.concatenate([vol, jnp.zeros((pad,), vol.dtype)])
+    h_new, tau, g_mean = _pallas(dx, h, vol, p, block_b=bb,
+                                 interpret=not _on_tpu())
+    return h_new[:b], tau[:b], g_mean[:b]

@@ -7,9 +7,10 @@ the *streaming* router engine (RouterState threaded through the jit-compiled
 ``route_step``) assigns (route, r, p, v) per segment; token workloads
 (proportional to the chosen fidelity) are executed on real model pools.
 
-Each round consumes ``--segments-per-round`` segments per stream; the gate
-recurrence carries across segments and rounds (no window re-scan), and the
-last segment's solution drives the round's dispatch.
+Each round consumes ``--segments-per-round`` segments per stream in ONE
+compiled ``lax.scan`` (``RouterEngine.step_many``): the gate recurrence
+carries across segments and rounds (no window re-scan, no per-segment Python
+dispatch), and the last segment's solution drives the round's dispatch.
 """
 from __future__ import annotations
 
@@ -62,9 +63,11 @@ def main():
     for rnd in range(args.rounds):
         z = jnp.asarray([m[rnd * spr:(rnd + 1) * spr].mean() for _, m in streams])
         t_route = time.perf_counter()
-        # stream this round's segments through the stateful engine
-        for seg in range(rnd * spr, (rnd + 1) * spr):
-            sol = engine.step(dx_all[:, seg], z, aq)
+        # stream this round's segments through the engine in one lax.scan
+        dx_seq = jnp.swapaxes(dx_all[:, rnd * spr:(rnd + 1) * spr], 0, 1)
+        sols = engine.step_many(dx_seq, z, aq)
+        sol = jax.tree_util.tree_map(lambda x: x[-1], sols)
+        jax.block_until_ready(sol["route"])
         route_ms = (time.perf_counter() - t_route) * 1e3
 
         t0 = time.perf_counter()

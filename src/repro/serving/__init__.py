@@ -1,2 +1,3 @@
-from repro.serving.simulator import SimConfig, Simulator  # noqa: F401
+from repro.serving.simulator import SimConfig, Simulator, realize_rounds  # noqa: F401
 from repro.serving.baselines import BASELINES, make_method  # noqa: F401
+from repro.serving.scan import run_scan, serve_scan  # noqa: F401

@@ -1,0 +1,115 @@
+"""Whole-run serving engine: gate → Stage-1 → CCG → C6 → realization under
+one ``lax.scan``.
+
+``run_batch`` still drives rounds from a Python loop because methods are
+stateful host callables.  The R2E-VID engine, however, is a pure jit-compiled
+step (``route_step``), and the deterministic realization path is pure jnp
+(``realize_rounds``) — so the *entire* multi-round serving run compiles to a
+single program: ``RouterState`` is the carry, each scan step routes one
+segment batch and realizes its round, and the host touches the run exactly
+twice (feed inputs, read stacked metrics).
+
+``serve_scan`` is the compiled driver; ``run_scan`` is the host wrapper that
+samples rounds from a :class:`Simulator`, applies observation noise exactly
+like ``run_batch`` does, and aggregates the same scalar metrics — metric
+parity between the two is covered by tests/test_engine_scan.py.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.features import feature_dim
+from repro.core.gating import GateConfig
+from repro.core.robust import RobustProblem
+from repro.core.router import RouterConfig, RouterState, init_router_state, route_step
+from repro.serving.simulator import Simulator, realize_rounds
+
+
+@partial(jax.jit, static_argnames=("gate_cfg", "rcfg", "n_edge", "n_cloud"))
+def serve_scan(
+    prob: RobustProblem,
+    gate_cfg: GateConfig,
+    gate_params,
+    state: RouterState,
+    dx_seq,               # (R, M, d) per-round segment features
+    z_seq,                # (R, M) content difficulty
+    aq_seq,               # (R, M) accuracy requirements
+    bw_mult_seq,          # (R, 2) per-tier bandwidth fluctuation
+    u_seq,                # (R, K) realized compute deviation
+    rcfg: RouterConfig = RouterConfig(),
+    n_edge: int = 4,
+    n_cloud: int = 1,
+):
+    """Route and realize R rounds in one ``lax.scan``.
+
+    Returns ``(final_state, mets)`` where ``mets`` holds (R, M) arrays:
+    deterministic delay / energy / cost / accuracy plus the decisions
+    (route, r, p, v) and the gate scores tau.  Observation noise is the
+    caller's job (it needs host rng state), matching ``realize_batch``.
+    """
+    sys = prob.lat.sys
+
+    def body(st, xs):
+        dx, z, aq, bwm, u = xs
+        st, sol = route_step(prob, gate_cfg, gate_params, st, dx, z, aq, rcfg=rcfg)
+        met = realize_rounds(
+            sys, z, bwm, u, sol["route"], sol["r"], sol["p"], sol["v"],
+            n_edge=n_edge, n_cloud=n_cloud,
+        )
+        out = {k: met[k] for k in ("delay", "energy", "cost", "accuracy")}
+        out.update({k: sol[k] for k in ("route", "r", "p", "v", "tau")})
+        return st, out
+
+    return jax.lax.scan(
+        body, state, (dx_seq, z_seq, aq_seq, bw_mult_seq, u_seq)
+    )
+
+
+def run_scan(
+    sim: Simulator,
+    gate_cfg: GateConfig,
+    gate_params,
+    dx_seq=None,
+    n_rounds: int | None = None,
+    rcfg: RouterConfig = RouterConfig(),
+    feature_seed: int = 0,
+):
+    """Host wrapper: sample rounds, run ``serve_scan``, aggregate metrics.
+
+    Mirrors ``Simulator.run_batch`` driven by a :class:`RouterEngine` method:
+    rounds are sampled first (same rng order), the compiled scan routes and
+    realizes them, then observation noise is drawn in one shot exactly like
+    ``realize_batch``.  Returns the same scalar metric dict as ``run_batch``.
+    """
+    n = n_rounds or sim.sim.n_rounds
+    m = sim.sim.n_tasks
+    rnds = [sim.sample_round() for _ in range(n)]
+    if dx_seq is None:
+        frng = np.random.default_rng(feature_seed)
+        dx_seq = jnp.asarray(
+            frng.normal(size=(n, m, feature_dim())), jnp.float32)
+
+    prob = RobustProblem.build(sim.sys)
+    state = init_router_state(gate_cfg, m)
+    _, mets = serve_scan(
+        prob, gate_cfg, gate_params, state,
+        dx_seq,
+        jnp.asarray(np.stack([rd["z"] for rd in rnds]), jnp.float32),
+        jnp.asarray(np.stack([rd["aq"] for rd in rnds]), jnp.float32),
+        jnp.asarray(np.stack([rd["bw_mult"] for rd in rnds]), jnp.float32),
+        jnp.asarray(np.stack([rd["u"] for rd in rnds]), jnp.float32),
+        rcfg=rcfg,
+        n_edge=sim.sim.n_edge_servers, n_cloud=sim.sim.n_cloud_servers,
+    )
+    aq = np.stack([rd["aq"] for rd in rnds])
+    acc, success = sim.observe(np.asarray(mets["accuracy"]), aq)
+    out = {k: float(np.asarray(mets[k]).mean(axis=1).mean())
+           for k in ("delay", "energy", "cost")}
+    out["accuracy"] = float(acc.mean(axis=1).mean())
+    out["success"] = float(success.mean(axis=1).mean())
+    out["cloud_frac"] = float(np.asarray(mets["route"]).mean(axis=1).mean())
+    return out

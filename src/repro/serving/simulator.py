@@ -17,11 +17,14 @@ Methods only see ẑ (their own difficulty estimate) and A^q; the realized u
 (compute deviation) is drawn inside the Γ-budget uncertainty set — robust
 methods should degrade gracefully, nominal ones overshoot their SLA.
 
-``realize`` is fully vectorized: per-config GFLOPs come from the precomputed
-lattice table and LPT packing runs as a compiled scan over sorted tasks
-(vectorized across servers, and across whole rounds in ``realize_batch``).
-``realize_reference`` keeps the original per-task Python loop as the parity
-oracle for tests and benchmarks.
+The deterministic realization path is pure jnp (``realize_rounds``): per-
+config GFLOPs come from the precomputed lattice table and LPT packing runs
+as a compiled scan over sorted tasks (vectorized across servers, and across
+whole rounds in ``realize_batch``).  The same compiled function backs
+``realize``, ``realize_batch``, and the whole-run ``serve_scan`` driver
+(``repro.serving.scan``), so the scan engine and the host-loop simulator are
+bit-identical.  ``realize_reference`` keeps the original per-task Python
+loop as the parity oracle for tests and benchmarks.
 """
 from __future__ import annotations
 
@@ -83,6 +86,55 @@ def _lpt_queue(t_comp, route, n_edge: int, n_cloud: int):
     return fn(t_comp, route.astype(jnp.int32))
 
 
+@partial(jax.jit, static_argnames=("sys", "n_edge", "n_cloud"))
+def realize_rounds(sys: SystemConfig, z, bw_mult, u, route, r, p, v, *,
+                   n_edge: int, n_cloud: int):
+    """Deterministic realization in pure jnp (no observation noise).
+
+    Shape-generic over leading batch dims: z/route/r/p/v are (..., M),
+    bw_mult is (..., 2), u is (..., K).  Returns per-task delay / energy /
+    cost / accuracy / route with the same leading dims.  This is the single
+    realization path shared by ``Simulator.realize``, ``realize_batch``, and
+    the whole-run ``serve_scan`` driver.
+    """
+    lat = DecisionLattice.build(sys)
+    gtab = jnp.asarray(gflops_table(sys), jnp.float32)
+    route = route.astype(jnp.int32)
+    r, p, v = r.astype(jnp.int32), p.astype(jnp.int32), v.astype(jnp.int32)
+    m = route.shape[-1]
+
+    # --- transmission: fair-share the tier uplink among its tasks
+    tier_bw = jnp.asarray([sys.edge_bw_mbps, sys.cloud_bw_mbps], jnp.float32)
+    bw = tier_bw * bw_mult                                     # (..., 2)
+    data_mbit = lat.bw[r, p, route]                            # (..., M)
+    n_cloud_tasks = route.sum(axis=-1, keepdims=True)
+    n_tier = jnp.concatenate([m - n_cloud_tasks, n_cloud_tasks], axis=-1)
+    n_tier = jnp.maximum(n_tier, 1)
+    share = (jnp.take_along_axis(bw, route, -1)
+             / jnp.take_along_axis(n_tier, route, -1))
+    t_trans = data_mbit / jnp.maximum(share, 1e-6)
+
+    # --- compute: precomputed GFLOPs table + realized deviation u_v
+    gf = gtab[r, p, v, route]
+    thr = jnp.asarray([sys.edge_gflops, sys.cloud_gflops], jnp.float32)
+    t_comp = gf / thr[route] * (1.0 + jnp.take_along_axis(u, v, -1))
+
+    # --- queueing: compiled LPT packing (vmapped over leading dims)
+    t_queue = _lpt_queue(t_comp, route, n_edge, n_cloud)
+
+    delay = t_trans + t_queue + t_comp
+    power = jnp.asarray([sys.edge_power_w, sys.cloud_power_w], jnp.float32)
+    energy = power[route] * t_comp + sys.transmit_power_w * t_trans
+    cost = delay + sys.beta * energy
+
+    acc_flat = lat.accuracy_flat(z)                            # (..., M, F, K)
+    y = lat.flatten_index(route, r, p)
+    af = jnp.take_along_axis(acc_flat, y[..., None, None], axis=-2)[..., 0, :]
+    acc = jnp.take_along_axis(af, v[..., None], axis=-1)[..., 0]
+    return {"delay": delay, "energy": energy, "cost": cost,
+            "accuracy": acc, "route": route}
+
+
 class Simulator:
     def __init__(self, sys: SystemConfig, sim: SimConfig):
         self.sys = sys
@@ -117,46 +169,29 @@ class Simulator:
     # ------------------------------------------------------------------
     def _realize_deterministic(self, rnd, cfg):
         """Vectorized realization, minus observation noise (pure in rnd/cfg)."""
-        sys, sim = self.sys, self.sim
-        route = np.asarray(cfg["route"])
-        r, p, v = (np.asarray(cfg[k]) for k in ("r", "p", "v"))
-        m = route.shape[0]
+        met = realize_rounds(
+            self.sys,
+            jnp.asarray(rnd["z"], jnp.float32),
+            jnp.asarray(rnd["bw_mult"], jnp.float32),
+            jnp.asarray(rnd["u"], jnp.float32),
+            jnp.asarray(cfg["route"]), jnp.asarray(cfg["r"]),
+            jnp.asarray(cfg["p"]), jnp.asarray(cfg["v"]),
+            n_edge=self.sim.n_edge_servers, n_cloud=self.sim.n_cloud_servers,
+        )
+        return {k: np.asarray(val) for k, val in met.items()}
 
-        # --- transmission: fair-share the tier uplink among its tasks
-        bw = np.array([sys.edge_bw_mbps, sys.cloud_bw_mbps]) * rnd["bw_mult"]
-        data_mbit = self.bw_tab[r, p, route]
-        n_tier = np.maximum(np.bincount(route, minlength=2), 1)
-        share = bw[route] / n_tier[route]
-        t_trans = data_mbit / np.maximum(share, 1e-6)
-
-        # --- compute: precomputed GFLOPs table, no per-task Python loop
-        gf = self.gflops_tab[r, p, v, route]
-        thr = np.array([sys.edge_gflops, sys.cloud_gflops])
-        t_comp = gf / thr[route] * (1.0 + rnd["u"][v])
-
-        # --- queueing: compiled LPT packing
-        t_queue = np.asarray(_lpt_queue(
-            jnp.asarray(t_comp), jnp.asarray(route),
-            sim.n_edge_servers, sim.n_cloud_servers,
-        ))
-
-        delay = t_trans + t_queue + t_comp
-        power = np.array([sys.edge_power_w, sys.cloud_power_w])
-        energy = power[route] * t_comp + sys.transmit_power_w * t_trans
-        cost = delay + sys.beta * energy
-
-        acc_tab = np.asarray(self.lat.accuracy(jnp.asarray(rnd["z"])))
-        acc = acc_tab[np.arange(m), r, p, v, route]
-        return {"delay": delay, "energy": energy, "cost": cost,
-                "accuracy": acc, "route": route}
+    def observe(self, acc, aq):
+        """Observation noise + SLA success — the single home of the noise
+        model (σ=0.008) and success epsilon, shared by ``realize``,
+        ``realize_batch``, and the scan driver's ``run_scan``."""
+        acc = np.clip(np.asarray(acc) + self.rng.normal(0, 0.008, np.shape(acc)), 0, 1)
+        return acc, (acc >= np.asarray(aq) - 1e-6).astype(np.float32)
 
     def realize(self, rnd, cfg):
         """cfg: dict(route, r, p, v) int arrays (M,). Returns per-task metrics."""
         met = self._realize_deterministic(rnd, cfg)
-        m = met["route"].shape[0]
-        acc = np.clip(met["accuracy"] + self.rng.normal(0, 0.008, m), 0, 1)
-        return dict(met, accuracy=acc,
-                    success=(acc >= rnd["aq"] - 1e-6).astype(np.float32))
+        acc, success = self.observe(met["accuracy"], rnd["aq"])
+        return dict(met, accuracy=acc, success=success)
 
     # ------------------------------------------------------------------
     def realize_reference(self, rnd, cfg, noise=None):
@@ -219,48 +254,23 @@ class Simulator:
         per-task metric arrays of shape (R, M).  The LPT packing runs as one
         vmapped scan over all rounds.
         """
-        sys, sim = self.sys, self.sim
-        route = np.stack([np.asarray(c["route"]) for c in cfgs])      # (R, M)
-        r = np.stack([np.asarray(c["r"]) for c in cfgs])
-        p = np.stack([np.asarray(c["p"]) for c in cfgs])
-        v = np.stack([np.asarray(c["v"]) for c in cfgs])
         z = np.stack([rd["z"] for rd in rnds])                        # (R, M)
         aq = np.stack([rd["aq"] for rd in rnds])
-        bw_mult = np.stack([rd["bw_mult"] for rd in rnds])            # (R, 2)
-        u = np.stack([rd["u"] for rd in rnds])                        # (R, K)
-        n_rounds, m = route.shape
-
-        bw = np.array([sys.edge_bw_mbps, sys.cloud_bw_mbps])[None] * bw_mult
-        data_mbit = self.bw_tab[r, p, route]
-        n_cloud = route.sum(axis=1)
-        n_tier = np.stack([m - n_cloud, n_cloud], axis=1)             # (R, 2)
-        n_tier = np.maximum(n_tier, 1)
-        rows = np.arange(n_rounds)[:, None]
-        share = bw[rows, route] / n_tier[rows, route]
-        t_trans = data_mbit / np.maximum(share, 1e-6)
-
-        gf = self.gflops_tab[r, p, v, route]
-        thr = np.array([sys.edge_gflops, sys.cloud_gflops])
-        t_comp = gf / thr[route] * (1.0 + u[rows, v])
-
-        t_queue = np.asarray(_lpt_queue(
-            jnp.asarray(t_comp), jnp.asarray(route),
-            sim.n_edge_servers, sim.n_cloud_servers,
-        ))
-
-        delay = t_trans + t_queue + t_comp
-        power = np.array([sys.edge_power_w, sys.cloud_power_w])
-        energy = power[route] * t_comp + sys.transmit_power_w * t_trans
-        cost = delay + sys.beta * energy
-
-        acc_tab = np.asarray(self.lat.accuracy(jnp.asarray(z)))       # (R, M, N, Z, K, 2)
-        acc = acc_tab[rows, np.arange(m)[None], r, p, v, route]
-        acc = np.clip(acc + self.rng.normal(0, 0.008, (n_rounds, m)), 0, 1)
-        return {
-            "delay": delay, "energy": energy, "cost": cost, "accuracy": acc,
-            "success": (acc >= aq - 1e-6).astype(np.float32),
-            "route": route,
-        }
+        n_rounds, m = z.shape
+        met = realize_rounds(
+            self.sys,
+            jnp.asarray(z, jnp.float32),
+            jnp.asarray(np.stack([rd["bw_mult"] for rd in rnds]), jnp.float32),
+            jnp.asarray(np.stack([rd["u"] for rd in rnds]), jnp.float32),
+            jnp.asarray(np.stack([np.asarray(c["route"]) for c in cfgs])),
+            jnp.asarray(np.stack([np.asarray(c["r"]) for c in cfgs])),
+            jnp.asarray(np.stack([np.asarray(c["p"]) for c in cfgs])),
+            jnp.asarray(np.stack([np.asarray(c["v"]) for c in cfgs])),
+            n_edge=self.sim.n_edge_servers, n_cloud=self.sim.n_cloud_servers,
+        )
+        met = {k: np.asarray(val) for k, val in met.items()}
+        acc, success = self.observe(met["accuracy"], aq)
+        return dict(met, accuracy=acc, success=success)
 
     # ------------------------------------------------------------------
     def run(self, method: Callable, n_rounds=None) -> Dict[str, float]:

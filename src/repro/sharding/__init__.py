@@ -1,3 +1,4 @@
+from repro.sharding.compat import shard_map  # noqa: F401
 from repro.sharding.rules import (  # noqa: F401
     ShardingRules,
     make_rules,

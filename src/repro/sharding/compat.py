@@ -1,0 +1,23 @@
+"""jax-version-compatible ``shard_map``.
+
+jax >= 0.5 exports ``shard_map`` at the top level with a ``check_vma``
+kwarg; older releases keep it under ``jax.experimental`` with ``check_rep``.
+Every shard_map user in the repo (pipeline parallelism, the sharded CCG
+sweep, compressed collectives) goes through this shim.
+"""
+from __future__ import annotations
+
+try:  # jax >= 0.5
+    from jax import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+        return _shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=check_vma
+        )
+except ImportError:  # older jax: experimental namespace, check_rep kwarg
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+        return _shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=check_vma
+        )

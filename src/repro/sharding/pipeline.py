@@ -21,22 +21,9 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-try:  # jax >= 0.5 exports shard_map at top level with check_vma
-    from jax import shard_map as _shard_map
-
-    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
-        return _shard_map(
-            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=check_vma
-        )
-except ImportError:  # older jax: experimental namespace, check_rep kwarg
-    from jax.experimental.shard_map import shard_map as _shard_map
-
-    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
-        return _shard_map(
-            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=check_vma
-        )
-
 from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.sharding.compat import shard_map  # noqa: F401 (re-export)
 
 
 def split_stages(layer_params, n_stages: int):
