@@ -3,6 +3,7 @@ scan drivers, the CCG sweep, and simulator realization throughput.
 
   PYTHONPATH=src python benchmarks/router_bench.py [--streams 64] [--steps 50]
   PYTHONPATH=src python benchmarks/router_bench.py --json   # + BENCH_router.json
+  PYTHONPATH=src python benchmarks/router_bench.py --check BENCH_router.json
 
 Prints ``name,us_per_call,derived`` CSV lines (the repo benchmark contract):
 
@@ -11,7 +12,9 @@ Prints ``name,us_per_call,derived`` CSV lines (the repo benchmark contract):
                            and the derived segments/sec
   router/route_scan_per_segment — amortized per-segment cost when a whole
                            multi-segment round runs under one lax.scan
-  router/solve_ccg       — the hoisted CCG (M, P, F, K) sweep alone
+  router/solve_ccg       — the unrolled masked CCG sweep alone
+  router/solve_ccg_while — the legacy per-task while_loop CCG (the unrolled
+                           solver's oracle), plus the unrolled speedup
   router/route_windowed  — the stateless windowed ``route`` on the same load
                            (re-scans the whole feature window each call)
   engine/serve_scan_per_round — whole-run driver (route + realize per round,
@@ -23,18 +26,26 @@ Prints ``name,us_per_call,derived`` CSV lines (the repo benchmark contract):
                            are realized in one vmapped batch
 
 With ``--json`` the same rows are written to ``BENCH_router.json`` so every
-PR records the perf trajectory (CI uploads it as an artifact).
+PR records the perf trajectory (CI uploads it as an artifact).  With
+``--check PATH`` the run becomes a regression gate: any benchmark more than
+``REGRESSION_FACTOR``x slower than the same-named row in the checked-in
+baseline fails the process (loose threshold — shared runners are noisy and
+CI runs tiny smoke sizes against the full-size baseline).
 """
 from __future__ import annotations
 
 import argparse
 import json
 import pathlib
+import sys
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+# --check fails any benchmark this much slower than its baseline row
+REGRESSION_FACTOR = 2.0
 
 
 def _timeit(fn, iters: int, chunks: int = 3) -> float:
@@ -56,7 +67,7 @@ def bench_route_step(streams: int, steps: int, window: int = 8,
     from repro.core.cost_model import SystemConfig
     from repro.core.features import feature_dim
     from repro.core.gating import GateConfig, gate_specs
-    from repro.core.robust import RobustProblem, solve_ccg
+    from repro.core.robust import RobustProblem, solve_ccg, solve_ccg_while
     from repro.core.router import RouterEngine, route
     from repro.models.params import init_params
 
@@ -94,6 +105,12 @@ def bench_route_step(streams: int, steps: int, window: int = 8,
 
     us_ccg = _timeit(ccg, steps)
 
+    def ccg_while():
+        sol = solve_ccg_while(prob, z, aq)
+        jax.block_until_ready(sol["route"])
+
+    us_ccg_while = _timeit(ccg_while, steps)
+
     dx_win = jnp.asarray(rng.normal(size=(streams, window, feature_dim())), jnp.float32)
 
     def windowed():
@@ -106,6 +123,8 @@ def bench_route_step(streams: int, steps: int, window: int = 8,
         ("router/route_scan_per_segment", us_scan,
          f"segments_per_s={scan_seg_per_s:.0f},scan_len={scan_segments}"),
         ("router/solve_ccg", us_ccg, f"tasks={streams}"),
+        ("router/solve_ccg_while", us_ccg_while,
+         f"tasks={streams},unrolled_speedup={us_ccg_while / max(us_ccg, 1e-9):.2f}x"),
         ("router/route_windowed", us_win, f"window={window}"),
     ]
 
@@ -132,12 +151,14 @@ def bench_serve_scan(streams: int, rounds: int, iters: int = 5):
     aq = jnp.asarray(np.stack([r["aq"] for r in rnds]), jnp.float32)
     bwm = jnp.asarray(np.stack([r["bw_mult"] for r in rnds]), jnp.float32)
     u = jnp.asarray(np.stack([r["u"] for r in rnds]), jnp.float32)
-    state = init_router_state(gcfg, streams)
+    # the compiled scan donates its carry, so the state must be threaded
+    # (exactly how a real serving loop uses it) rather than reused
+    carry = {"state": init_router_state(gcfg, streams)}
 
     def run():
-        _, mets = serve_scan(prob, gcfg, gparams, state, dx_seq, z, aq, bwm, u,
-                             n_edge=sim.sim.n_edge_servers,
-                             n_cloud=sim.sim.n_cloud_servers)
+        carry["state"], mets = serve_scan(
+            prob, gcfg, gparams, carry["state"], dx_seq, z, aq, bwm, u,
+            n_edge=sim.sim.n_edge_servers, n_cloud=sim.sim.n_cloud_servers)
         jax.block_until_ready(mets["cost"])
 
     us = _timeit(run, iters) / rounds
@@ -181,6 +202,25 @@ def bench_realize(n_tasks: int, iters: int = 20):
     ]
 
 
+def check_regressions(rows, baseline_path: str) -> int:
+    """Compare rows against a baseline JSON; return the number of rows more
+    than REGRESSION_FACTOR x slower (rows without a baseline entry pass)."""
+    base = json.loads(pathlib.Path(baseline_path).read_text())
+    base_us = {b["name"]: b["us_per_call"] for b in base["benchmarks"]}
+    bad = 0
+    for name, us, _ in rows:
+        ref = base_us.get(name)
+        if ref is None:
+            print(f"check: {name} has no baseline row — skipped")
+            continue
+        ratio = us / max(ref, 1e-9)
+        verdict = "REGRESSION" if ratio > REGRESSION_FACTOR else "ok"
+        print(f"check: {name} {us:.1f}us vs baseline {ref:.1f}us "
+              f"({ratio:.2f}x) {verdict}")
+        bad += ratio > REGRESSION_FACTOR
+    return bad
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--streams", type=int, default=64)
@@ -189,6 +229,9 @@ def main():
     ap.add_argument("--scan-rounds", type=int, default=16)
     ap.add_argument("--json", action="store_true",
                     help="also write BENCH_router.json next to the repo root")
+    ap.add_argument("--check", metavar="BASELINE",
+                    help="fail if any benchmark is >%.0fx slower than the "
+                         "same-named row in this baseline JSON" % REGRESSION_FACTOR)
     args = ap.parse_args()
 
     rows = []
@@ -199,6 +242,8 @@ def main():
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+
+    n_bad = check_regressions(rows, args.check) if args.check else 0
 
     if args.json:
         out = {
@@ -214,6 +259,9 @@ def main():
         path = pathlib.Path(__file__).resolve().parent.parent / "BENCH_router.json"
         path.write_text(json.dumps(out, indent=2) + "\n")
         print(f"wrote {path}")
+
+    if n_bad:
+        sys.exit(f"{n_bad} benchmark(s) regressed >{REGRESSION_FACTOR}x")
 
 
 if __name__ == "__main__":

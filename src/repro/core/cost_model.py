@@ -68,6 +68,18 @@ def version_flops(sys: SystemConfig, tier: int, k: int, res_p: int) -> float:
 # ---------------------------------------------------------------------------
 # Vectorized tables over the full decision lattice
 # ---------------------------------------------------------------------------
+def _accuracy_formula(z, r, p, k, tier):
+    """Shared accuracy surface f(r, p, v, tier | z) — single source of truth
+    for the broadcast table and the pointwise gather (elementwise ops in the
+    same order, so both evaluations agree bitwise).  r/p are normalized to
+    [0, 1]; k/tier are float indices."""
+    a_max = 0.60 + 0.045 * k + 0.04 * tier           # bigger model, higher ceiling
+    sat = 1.0 - jnp.exp(-(2.5 + 0.3 * k) * r)
+    f = a_max * sat
+    f = f - 0.10 * z * (1.0 - p) - 0.06 * z * (1.0 - r)
+    return jnp.clip(f, 0.0, 1.0)
+
+
 def accuracy_table(sys: SystemConfig, difficulty):
     """f(r, p, v, y | z): (..., N, Z, K, 2) accuracy for difficulty z (...,).
 
@@ -82,12 +94,19 @@ def accuracy_table(sys: SystemConfig, difficulty):
     p = p[None, :, None, None]
     k = k[None, None, :, None]
     tier = jnp.arange(2, dtype=jnp.float32)[None, None, None, :]
+    return _accuracy_formula(z, r, p, k, tier)
 
-    a_max = 0.60 + 0.045 * k + 0.04 * tier           # bigger model, higher ceiling
-    sat = 1.0 - jnp.exp(-(2.5 + 0.3 * k) * r)
-    f = a_max * sat
-    f = f - 0.10 * z * (1.0 - p) - 0.06 * z * (1.0 - r)
-    return jnp.clip(f, 0.0, 1.0)
+
+def accuracy_at(sys: SystemConfig, difficulty, r, p, v, route):
+    """Accuracy at chosen (r, p, v, route) index arrays — the table formula
+    evaluated only at the given configs: O(M) per task instead of the
+    O(M·N·Z·K·2) broadcast table (the realization hot path gathers exactly
+    one entry per task, so it never needs the table)."""
+    z = jnp.asarray(difficulty)
+    rn = jnp.asarray(sys.resolutions, jnp.float32)[r] / 1080.0
+    pn = jnp.asarray(sys.fps_options, jnp.float32)[p] / 50.0
+    return _accuracy_formula(z, rn, pn, v.astype(jnp.float32),
+                             route.astype(jnp.float32))
 
 
 def cost_tables(sys: SystemConfig):

@@ -29,6 +29,11 @@ class GateConfig:
     d_hidden: int = 32
     var_window: int = 8          # T in Eq. (5)
     alpha_init: float = 1.0
+    # every how many steps the batched gate recomputes its running Σ/Σ² from
+    # the exact ring buffer (bounds float32 drift of the incremental
+    # volatility).  0 = once per window (var_window); 1 = every step (the
+    # incremental sums are then always exact, matching the looped oracle).
+    resync_period: int = 0
 
 
 def gate_specs(cfg: GateConfig) -> dict:
@@ -124,14 +129,16 @@ def gate_step_batch(cfg: GateConfig, p, state: GateBatchState, dx, *,
     var_sumsq = state.var_sumsq + dx * dx - old * old
     hit = jnp.arange(t)[None, :] == slot[:, None]                 # (M, T)
     buf = jnp.where(hit[:, :, None], dx[:, None, :], state.var_buf)
-    # resync the running sums against the exact ring buffer once per window:
-    # the incremental updates random-walk float32 rounding error over long
-    # serving runs; the buffer is exact, so this bounds the drift to T steps
-    # at an amortized O(d) cost (streams advance in lockstep, and if they
-    # don't, an off-phase resync is still exact).  lax.cond keeps the (T, d)
-    # reduction off the trace-hot path on non-resync steps.
+    # resync the running sums against the exact ring buffer on a configured
+    # cadence (default: once per window): the incremental updates random-walk
+    # float32 rounding error over long serving runs; the buffer is exact, so
+    # this bounds the drift to ``resync_period`` steps at an amortized O(d)
+    # cost (streams advance in lockstep, and if they don't, an off-phase
+    # resync is still exact).  lax.cond keeps the (T, d) reduction off the
+    # trace-hot path on non-resync steps.
+    period = cfg.resync_period or t
     var_sum, var_sumsq = jax.lax.cond(
-        (state.var_idx[0] + 1) % t == 0,
+        (state.var_idx[0] + 1) % period == 0,
         lambda: (buf.sum(axis=1), jnp.square(buf).sum(axis=1)),
         lambda: (var_sum, var_sumsq),
     )

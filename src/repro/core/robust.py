@@ -16,8 +16,17 @@ column-and-constraint master (Alg. 2) alternates:
           of the recourse value  min_v b2(v; y)·(1+u_j,v)
     SP  : u_{j+1} = argmax_{u∈poles} min_{v feasible} b2(v; y*)·(1+u_v)
 
-until O_up − O_down ≤ θ.  Everything is vectorized over tasks with vmap;
-``exact_oracle`` brute-forces min_y max_u min_v for tests.
+until O_up − O_down ≤ θ.  The production solver (:func:`solve_ccg`) runs the
+alternation as a *fixed-unroll masked iteration* over the whole task batch:
+the scenario set is bounded by the pole count P (an iteration that adds no
+new pole has converged), so at most min(max_iters, P+1) masked
+master/adversary updates suffice, with a ``done`` flag freezing converged
+lanes.  No ``lax.while_loop`` is lowered — the solver is a straight chain of
+batched reductions, fully fusable under ``vmap``/``scan``/``shard_map``, and
+the hot master reduction dispatches to the Pallas ``ccg_master`` kernel on
+TPU.  :func:`solve_ccg_while` keeps the original per-task ``while_loop``
+solver as the decision-identity oracle; ``exact_oracle`` brute-forces
+min_y max_u min_v for tests.
 
 All flattened-index bookkeeping lives in :class:`DecisionLattice`
 (``repro.core.lattice``) — this module never reshapes the lattice itself.
@@ -32,8 +41,8 @@ import jax.numpy as jnp
 
 from repro.core.cost_model import SystemConfig
 from repro.core.lattice import DecisionLattice
-
-BIG = 1e9
+from repro.kernels.ccg_master.ops import ccg_master
+from repro.kernels.ccg_master.ref import BIG  # shared infeasibility sentinel
 
 
 def _poles(num_versions: int, gamma: int):
@@ -94,18 +103,77 @@ class RobustProblem:
         return self.lat.b2
 
 
-@partial(jax.jit, static_argnames=("max_iters",))
+def _encode_tasks(prob: RobustProblem, difficulty, acc_req):
+    """Per-task CCG inputs: feasibility masks + the gathered recourse slab.
+
+    The scaled recourse table b2·(1+u) over all poles is task-independent
+    (hoisted onto ``RobustProblem``), so each task only encodes its (F, K)
+    feasibility mask as a bitmask and gathers — no per-task (P, F, K) sweep.
+    Returns ``(f_flat, feas_f, fs_ok, rec_all)`` with shapes
+    ((M, F, K), (M, F, K), (M, F), (M, P, F)).
+    """
+    lat = prob.lat
+    sys = lat.sys
+    # C1 protected with the robust accuracy margin (h in the Benders cuts)
+    f_flat, feas_f = lat.feasible_flat(difficulty, acc_req, sys.acc_margin_robust)
+    pow2 = 2 ** jnp.arange(sys.num_versions)
+    code = (feas_f * pow2[None, None]).sum(axis=-1)   # (M, F) subset codes
+    rec_all = jnp.take_along_axis(
+        prob.rec_table[None], code[:, None, :, None], axis=-1
+    )[..., 0]                                         # (M, P, F)
+    return f_flat, feas_f, feas_f.any(axis=-1), rec_all
+
+
+def _finish_solution(prob: RobustProblem, f_flat, feas_f, rec_all, y_f):
+    """Shared epilogue: final recourse v*, infeasibility fallback, unflatten.
+
+    y_f: (M,) converged first-stage indices.  Picks v* at the worst pole of
+    y_f, then applies the graceful margin relaxation (tasks infeasible *with*
+    the robust margin fall back to the max-accuracy configuration).
+    """
+    lat = prob.lat
+    sys = lat.sys
+    b2 = lat.b2_flat
+    sp_vals = jnp.take_along_axis(rec_all, y_f[:, None, None], axis=2)[..., 0]
+    worst = sp_vals.argmax(axis=1)                    # (M,)
+    u = prob.poles[worst] * prob.u_dev[None]          # (M, K)
+    feas_y = jnp.take_along_axis(feas_f, y_f[:, None, None], axis=1)[:, 0]
+    vals = jnp.where(feas_y, b2[y_f] * (1.0 + u), BIG)
+    v_star = vals.argmin(axis=1)
+    none_ok = ~feas_f.any(axis=(1, 2))
+    best_acc = f_flat.reshape(f_flat.shape[0], -1).argmax(axis=1)
+    y_f = jnp.where(none_ok, best_acc // sys.num_versions, y_f)
+    v_star = jnp.where(none_ok, best_acc % sys.num_versions, v_star)
+    route, r_idx, p_idx = lat.unflatten_index(y_f)
+    return route, r_idx, p_idx, v_star, none_ok
+
+
+@partial(jax.jit, static_argnames=("max_iters", "force"))
 def solve_ccg(prob: RobustProblem, difficulty, acc_req, max_iters: int = 8,
-              theta: float = 1e-4, warm_y=None):
-    """Alg. 2 for a batch of tasks.
+              theta: float = 1e-4, warm_y=None, force: str = "auto"):
+    """Alg. 2 for a batch of tasks — fixed-unroll masked iteration.
 
     difficulty: (M,) content difficulty z; acc_req: (M,) A^q_i.
     Returns dict with y (route), r, p, v indices + objective bounds.
 
-    The scaled recourse table b2·(1+u) over all poles is task-independent, so
-    it is hoisted out of the per-task vmap entirely: ``RobustProblem`` caches
-    its mins over every feasible-version subset, and each task just encodes
-    its (F, K) feasibility mask as a bitmask and gathers.
+    Instead of a per-task ``lax.while_loop`` (whose batched lowering carries
+    ~1 ms of fixed overhead per call on CPU and blocks fusion), the CCG
+    alternation is unrolled min(max_iters, P+1) times over the *whole* batch:
+    each SP step either adds a new pole to a task's scenario set or proves
+    convergence, so P+1 masked steps are exact, and a ``done`` flag freezes
+    converged lanes (their state stops updating, exactly as if the loop had
+    exited).  Decisions, bounds, and iteration counts are bit-identical to
+    :func:`solve_ccg_while`.
+
+    The master reduction (η-max over generated scenarios, feasibility mask,
+    argmin over F) dispatches to the Pallas ``ccg_master`` kernel on TPU,
+    which keeps the whole (P, F) recourse slab VMEM-resident per tile.  Off
+    TPU the same master is computed incrementally: η is a running (M, F) max
+    folded in as each pole is generated (max is exact in floats, so the
+    running form is bit-identical to the masked slab reduction) — O(M·F) per
+    iteration instead of O(M·P·F).  ``force`` pins the master implementation
+    for tests: "pallas" (interpret off-TPU) / "ref" exercise the slab op,
+    "auto" picks the backend default.
 
     ``warm_y``: optional (M,) flat first-stage warm starts (the Stage-1
     route).  When given, each task's scenario set is seeded with the exact
@@ -114,19 +182,96 @@ def solve_ccg(prob: RobustProblem, difficulty, acc_req, max_iters: int = 8,
     so typical tasks converge in fewer CCG iterations.
     """
     lat = prob.lat
+    c1 = lat.c1_flat                                  # (F,)
+    f_flat, feas_f, fs_ok, rec_all = _encode_tasks(prob, difficulty, acc_req)
+    m = feas_f.shape[0]
+    n_poles = prob.poles.shape[0]
+    if warm_y is None:
+        warm_y = -jnp.ones(m, jnp.int32)
+
+    # warm start: seed the scenario set with the warm y's worst pole and
+    # start O_up at its robust cost (only when the warm start is usable)
+    wy = jnp.maximum(warm_y, 0)
+    use_warm = (warm_y >= 0) & jnp.take_along_axis(fs_ok, wy[:, None], axis=1)[:, 0]
+    rec_wy = jnp.take_along_axis(rec_all, wy[:, None, None], axis=2)[..., 0]
+    warm_pole = rec_wy.argmax(axis=1)                 # (M,)
+    warm_up = c1[wy] + jnp.take_along_axis(rec_wy, warm_pole[:, None], axis=1)[:, 0]
+    o_up = jnp.where(use_warm, warm_up, BIG)
+    o_down = jnp.full((m,), -BIG)
+    y_best = wy
+    done = jnp.zeros((m,), bool)
+    iters = jnp.zeros((m,), jnp.int32)
+
+    # master-step state: the Pallas slab kernel consumes the (M, P) scenario
+    # mask against the full recourse slab; the jnp path folds each generated
+    # pole into a running (M, F) η-max (bit-identical — max is exact)
+    slab_master = force != "auto" or jax.default_backend() == "tpu"
+    if slab_master:
+        pole_iota = jnp.arange(n_poles)[None, :]      # (1, P)
+        scen_mask = jnp.where(
+            use_warm[:, None] & (pole_iota == warm_pole[:, None]), 1.0, 0.0)
+    else:
+        rec_warm = jnp.take_along_axis(
+            rec_all, warm_pole[:, None, None], axis=1)[:, 0]       # (M, F)
+        eta_run = jnp.where(use_warm[:, None], rec_warm, -BIG)
+        has_scen = use_warm
+
+    for _ in range(min(max_iters, n_poles + 1)):
+        live = ~done
+        # MP1: eta(y) = max over generated scenarios of the recourse value,
+        # obj = c1 + eta masked to feasible options, argmin over F
+        if slab_master:
+            y_star, od_new = ccg_master(rec_all, scen_mask, fs_ok, c1, force=force)
+        else:
+            eta = jnp.where(has_scen[:, None], eta_run, 0.0)
+            obj = jnp.where(fs_ok, c1[None] + eta, BIG)
+            y_star = obj.argmin(axis=1).astype(jnp.int32)
+            od_new = jnp.take_along_axis(obj, y_star[:, None], axis=1)[:, 0]
+        # SP: exact worst-case pole for y_star (Eq. 10 pole optimality)
+        sp_vals = jnp.take_along_axis(rec_all, y_star[:, None, None], axis=2)[..., 0]
+        worst_pole = sp_vals.argmax(axis=1)           # (M,)
+        q = jnp.take_along_axis(sp_vals, worst_pole[:, None], axis=1)[:, 0]
+        cand = c1[y_star] + q
+        # the returned decision is the INCUMBENT achieving O_up, not the
+        # last master argmin — the master's obj only lower-bounds the
+        # robust cost, so a θ-tied y_star may be worse than the incumbent
+        up_new = jnp.minimum(o_up, cand)
+        # freeze converged lanes: done lanes keep their pre-convergence state
+        y_best = jnp.where(live & (cand < o_up), y_star, y_best)
+        o_down = jnp.where(live, od_new, o_down)
+        o_up = jnp.where(live, up_new, o_up)
+        if slab_master:
+            # add the scenario column as a one-hot max (XLA scatter is slow)
+            mask_new = jnp.maximum(
+                scen_mask, (pole_iota == worst_pole[:, None]).astype(scen_mask.dtype))
+            scen_mask = jnp.where(live[:, None], mask_new, scen_mask)
+        else:
+            rec_new = jnp.take_along_axis(
+                rec_all, worst_pole[:, None, None], axis=1)[:, 0]   # (M, F)
+            eta_run = jnp.where(
+                live[:, None], jnp.maximum(eta_run, rec_new), eta_run)
+            has_scen = has_scen | live
+        iters = iters + live.astype(jnp.int32)
+        done = jnp.where(live, (up_new - od_new) <= theta, done)
+
+    route, r_idx, p_idx, v_star, none_ok = _finish_solution(
+        prob, f_flat, feas_f, rec_all, y_best)
+    return {
+        "route": route, "r": r_idx, "p": p_idx, "v": v_star,
+        "o_up": o_up, "o_down": o_down, "iters": iters, "infeasible": none_ok,
+    }
+
+
+@partial(jax.jit, static_argnames=("max_iters",))
+def solve_ccg_while(prob: RobustProblem, difficulty, acc_req, max_iters: int = 8,
+                    theta: float = 1e-4, warm_y=None):
+    """Original per-task ``lax.while_loop`` CCG — the unrolled solver's
+    decision-identity oracle (kept out of the serving hot path)."""
+    lat = prob.lat
     sys = lat.sys
-    # C1 protected with the robust accuracy margin (h in the Benders cuts)
-    f_flat, feas_f = lat.feasible_flat(difficulty, acc_req, sys.acc_margin_robust)
     c1 = lat.c1_flat                                  # (F,)
     b2 = lat.b2_flat                                  # (F, K)
-    # hoisted recourse: the scaled b2·(1+u) mins live in the precomputed
-    # task-independent (P, F, 2^K) table — each task only encodes its (F, K)
-    # feasibility mask as a bitmask and gathers, no per-task (P, F, K) sweep.
-    pow2 = 2 ** jnp.arange(sys.num_versions)
-    code = (feas_f * pow2[None, None]).sum(axis=-1)   # (M, F) subset codes
-    rec_all_m = jnp.take_along_axis(
-        prob.rec_table[None], code[:, None, :, None], axis=-1
-    )[..., 0]                                         # (M, P, F)
+    f_flat, feas_f, _, rec_all_m = _encode_tasks(prob, difficulty, acc_req)
     if warm_y is None:
         warm_y = -jnp.ones(feas_f.shape[0], jnp.int32)
 
@@ -213,22 +358,23 @@ def solve_ccg_sharded(prob: RobustProblem, difficulty, acc_req, mesh,
     """
     from jax.sharding import PartitionSpec as P
 
-    from repro.sharding.compat import shard_map
+    from repro.sharding.compat import pad_leading, shard_map
 
     m = difficulty.shape[0]
     n_dev = mesh.shape[axis]
     pad = (-m) % n_dev
-    difficulty = jnp.concatenate([difficulty, jnp.zeros((pad,), difficulty.dtype)])
-    acc_req = jnp.concatenate([acc_req, jnp.zeros((pad,), acc_req.dtype)])
+    difficulty = pad_leading(difficulty, pad)
+    acc_req = pad_leading(acc_req, pad)
     if warm_y is None:
         warm_y = -jnp.ones((m,), jnp.int32)
-    warm_y = jnp.concatenate([warm_y, -jnp.ones((pad,), jnp.int32)])
+    warm_y = pad_leading(warm_y, pad, value=-1)
 
     def shard_fn(pb, z, aq, wy):
         return solve_ccg(pb, z, aq, max_iters=max_iters, theta=theta, warm_y=wy)
 
-    # check_vma=False: the CCG while_loop has no replication rule, but every
-    # operand is either axis-sharded or an explicitly replicated input
+    # check_vma=False: the replicated problem tables have no tracked
+    # replication rule, but every operand is either axis-sharded or an
+    # explicitly replicated input
     sol = shard_map(
         shard_fn, mesh=mesh,
         in_specs=(P(), P(axis), P(axis), P(axis)),

@@ -169,7 +169,44 @@ def init_router_state(gate_cfg: GateConfig, n_streams: int) -> RouterState:
     )
 
 
-@partial(jax.jit, static_argnames=("gate_cfg", "rcfg"))
+def route_segment(
+    prob: RobustProblem,
+    gate_cfg: GateConfig,
+    gate_params,
+    state: RouterState,
+    dx,                   # (M, d) motion features of THIS segment per stream
+    difficulty,           # (M,)
+    acc_req,              # (M,)
+    rcfg: RouterConfig = RouterConfig(),
+):
+    """Per-stream portion of the streaming step: gate → Stage-1 → CCG →
+    temporal consistency.  Everything here is embarrassingly parallel over
+    streams (no cross-task reduction), so the sharded ``serve_scan`` runs it
+    on each device's local stream shard; the cross-task C6 repair and
+    realization happen after.  Returns ``(new_gate, taus, sol)`` with the
+    pre-repair solution (tau / warm diagnostics included).
+    """
+    lat = prob.lat
+    new_gate, (taus, _gate_means) = gate_step_batch(
+        gate_cfg, gate_params, state.gate, dx
+    )
+    warm_route, warm_r = stage1_configure(
+        lat, taus, difficulty, acc_req, state.prev_route, state.prev_tau, rcfg
+    )
+    # Stage-1 picks (route, r) at max fps — seed CCG with that configuration
+    warm_y = lat.flatten_index(warm_route, warm_r, lat.sys.n_fps - 1)
+    sol = solve_ccg(prob, difficulty, acc_req, warm_y=warm_y.astype(jnp.int32))
+    # Stage-1 consistency overrides Stage-2 route flips that the gate forbids
+    sol = dict(sol, route=apply_temporal_consistency(
+        sol["route"], state.prev_route, taus, state.prev_tau, rcfg
+    ))
+    sol["tau"] = taus
+    sol["warm_route"] = warm_route
+    sol["warm_r"] = warm_r
+    return new_gate, taus, sol
+
+
+@partial(jax.jit, static_argnames=("gate_cfg", "rcfg"), donate_argnames=("state",))
 def route_step(
     prob: RobustProblem,
     gate_cfg: GateConfig,
@@ -187,27 +224,17 @@ def route_step(
     the Stage-1 configuration seeding the CCG scenario set (true warm start),
     applies the temporal-consistency constraint against the carried history,
     and repairs the C6 bandwidth budget.
+
+    ``state`` is donated: the carry buffers are reused for the new state
+    instead of being copied every step, so callers must thread the returned
+    state (every in-repo caller already does).
     """
     lat = prob.lat
-    new_gate, (taus, _gate_means) = gate_step_batch(
-        gate_cfg, gate_params, state.gate, dx
+    new_gate, taus, sol = route_segment(
+        prob, gate_cfg, gate_params, state, dx, difficulty, acc_req, rcfg
     )
-
-    warm_route, warm_r = stage1_configure(
-        lat, taus, difficulty, acc_req, state.prev_route, state.prev_tau, rcfg
-    )
-    # Stage-1 picks (route, r) at max fps — seed CCG with that configuration
-    warm_y = lat.flatten_index(warm_route, warm_r, lat.sys.n_fps - 1)
-    sol = solve_ccg(prob, difficulty, acc_req, warm_y=warm_y.astype(jnp.int32))
-    # Stage-1 consistency overrides Stage-2 route flips that the gate forbids
-    sol = dict(sol, route=apply_temporal_consistency(
-        sol["route"], state.prev_route, taus, state.prev_tau, rcfg
-    ))
     sol, bw_hist = enforce_bandwidth(lat, sol, difficulty, acc_req,
                                      rounds=rcfg.repair_rounds)
-    sol["tau"] = taus
-    sol["warm_route"] = warm_route
-    sol["warm_r"] = warm_r
     sol["bw_history"] = bw_hist
     new_state = RouterState(
         prev_route=sol["route"].astype(jnp.int32),
@@ -217,7 +244,7 @@ def route_step(
     return new_state, sol
 
 
-@partial(jax.jit, static_argnames=("gate_cfg", "rcfg"))
+@partial(jax.jit, static_argnames=("gate_cfg", "rcfg"), donate_argnames=("state",))
 def route_scan(
     prob: RobustProblem,
     gate_cfg: GateConfig,

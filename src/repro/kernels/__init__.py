@@ -9,7 +9,9 @@ Validated in interpret mode on CPU; compiled natively on TPU.
   mamba_scan       — blocked Mamba-1 selective scan (falcon-mamba)
   rglru            — blocked RG-LRU recurrence (recurrentgemma)
   temporal_gate    — fused R2E-VID gating cell (paper Eq. 5-6)
+  ccg_master       — masked CCG master step (paper Alg. 2 MP1, unrolled solver)
 """
+from repro.kernels.ccg_master.ops import ccg_master  # noqa: F401
 from repro.kernels.decode_attention.ops import decode_attention  # noqa: F401
 from repro.kernels.flash_attention.ops import flash_attention  # noqa: F401
 from repro.kernels.mamba_scan.ops import selective_scan  # noqa: F401

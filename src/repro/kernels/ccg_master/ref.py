@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the CCG master step (paper Alg. 2, MP1).
+
+This is exactly the reduction the robust solver's master problem performs
+every CCG iteration: the scenario-masked recourse maximum η(y), the
+feasibility-masked objective c1 + η, and its argmin over the F first-stage
+options.  The Pallas kernel and the unrolled solver both must reproduce it
+bit-for-bit (argmin ties break to the lowest flat index).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# infeasible-option sentinel shared by the kernel, this ref, and the solver
+# in repro.core.robust (which imports it) — one definition keeps the
+# infeasible-lane/argmin bit-parity contract in one place
+BIG = 1e9
+
+
+def ccg_master_ref(rec_all, scen_mask, fs_ok, c1):
+    """One masked MP1 step for a task batch.
+
+    rec_all: (M, P, F) per-task recourse values of every pole/option pair;
+    scen_mask: (M, P) 0/1 generated-scenario indicators; fs_ok: (M, F) bool
+    first-stage feasibility; c1: (F,) first-stage cost.  Returns
+    ``(y_star (M,) int32, o_down (M,))`` — the master argmin and its value
+    (the CCG lower bound).  Tasks with an empty scenario set get η = 0 (the
+    cold-start master is first-stage-cost-only); infeasible options score BIG.
+    """
+    active = jnp.where(scen_mask[..., None] > 0, rec_all, -BIG)
+    any_scen = scen_mask.sum(axis=-1, keepdims=True) > 0
+    eta = jnp.where(any_scen, active.max(axis=-2), 0.0)        # (M, F)
+    obj = jnp.where(fs_ok, c1 + eta, BIG)
+    y_star = obj.argmin(axis=-1)
+    o_down = jnp.take_along_axis(obj, y_star[..., None], axis=-1)[..., 0]
+    return y_star.astype(jnp.int32), o_down

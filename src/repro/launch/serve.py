@@ -10,7 +10,10 @@ the *streaming* router engine (RouterState threaded through the jit-compiled
 Each round consumes ``--segments-per-round`` segments per stream in ONE
 compiled ``lax.scan`` (``RouterEngine.step_many``): the gate recurrence
 carries across segments and rounds (no window re-scan, no per-segment Python
-dispatch), and the last segment's solution drives the round's dispatch.
+dispatch, carry buffers donated — never copied), and the last segment's
+solution drives the round's dispatch.  ``--gate-resync`` sets the cadence at
+which the batched gate recomputes its running volatility sums from the exact
+ring buffer (0 = once per window; 1 = every step, drift-free).
 """
 from __future__ import annotations
 
@@ -39,11 +42,13 @@ def main():
     ap.add_argument("--segments-per-round", type=int, default=8)
     ap.add_argument("--edge-arch", default="qwen1.5-0.5b")
     ap.add_argument("--cloud-arch", default="qwen3-8b")
+    ap.add_argument("--gate-resync", type=int, default=0,
+                    help="volatility resync cadence in steps (0 = per window)")
     args = ap.parse_args()
 
     sys_ = SystemConfig()
     prob = RobustProblem.build(sys_)
-    gcfg = GateConfig(d_feature=feature_dim())
+    gcfg = GateConfig(d_feature=feature_dim(), resync_period=args.gate_resync)
     gparams = init_params(gate_specs(gcfg), jax.random.PRNGKey(0))
     pools = make_tier_pools(get_smoke_config(args.edge_arch), get_smoke_config(args.cloud_arch))
 

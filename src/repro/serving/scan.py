@@ -1,5 +1,5 @@
 """Whole-run serving engine: gate → Stage-1 → CCG → C6 → realization under
-one ``lax.scan``.
+one ``lax.scan`` — optionally shard_mapped over the stream axis.
 
 ``run_batch`` still drives rounds from a Python loop because methods are
 stateful host callables.  The R2E-VID engine, however, is a pure jit-compiled
@@ -9,10 +9,17 @@ single program: ``RouterState`` is the carry, each scan step routes one
 segment batch and realizes its round, and the host touches the run exactly
 twice (feed inputs, read stacked metrics).
 
-``serve_scan`` is the compiled driver; ``run_scan`` is the host wrapper that
-samples rounds from a :class:`Simulator`, applies observation noise exactly
-like ``run_batch`` does, and aggregates the same scalar metrics — metric
-parity between the two is covered by tests/test_engine_scan.py.
+``serve_scan`` is the compiled driver.  With a ``mesh`` it becomes ONE
+compiled *sharded* scan: the per-stream work (batched gate, Stage-1, the
+unrolled CCG, temporal consistency) runs on each device's local stream shard,
+then the decisions are all-gathered so the cross-task tail of the round (C6
+bandwidth repair, LPT realization) is computed on the exact real-M batch —
+replicated arithmetic, so multi-device metrics are identical to the
+single-device path, and M pads to any device count.  ``run_scan`` is the host
+wrapper that samples rounds from a :class:`Simulator`, applies observation
+noise exactly like ``run_batch`` does, and aggregates the same scalar
+metrics — metric parity between the paths is covered by
+tests/test_engine_scan.py.
 """
 from __future__ import annotations
 
@@ -25,11 +32,20 @@ import numpy as np
 from repro.core.features import feature_dim
 from repro.core.gating import GateConfig
 from repro.core.robust import RobustProblem
-from repro.core.router import RouterConfig, RouterState, init_router_state, route_step
+from repro.core.router import (
+    RouterConfig,
+    RouterState,
+    enforce_bandwidth,
+    init_router_state,
+    route_segment,
+    route_step,
+)
 from repro.serving.simulator import Simulator, realize_rounds
 
+_MET_KEYS = ("delay", "energy", "cost", "accuracy")
+_SOL_KEYS = ("route", "r", "p", "v", "tau")
 
-@partial(jax.jit, static_argnames=("gate_cfg", "rcfg", "n_edge", "n_cloud"))
+
 def serve_scan(
     prob: RobustProblem,
     gate_cfg: GateConfig,
@@ -43,6 +59,8 @@ def serve_scan(
     rcfg: RouterConfig = RouterConfig(),
     n_edge: int = 4,
     n_cloud: int = 1,
+    mesh=None,
+    mesh_axis: str = "data",
 ):
     """Route and realize R rounds in one ``lax.scan``.
 
@@ -50,7 +68,29 @@ def serve_scan(
     deterministic delay / energy / cost / accuracy plus the decisions
     (route, r, p, v) and the gate scores tau.  Observation noise is the
     caller's job (it needs host rng state), matching ``realize_batch``.
+
+    ``mesh``: optional — when given, the whole round body is shard_mapped
+    over ``mesh_axis`` (the stream/task axis M, padded to any device count)
+    and the run compiles to a single sharded program; metrics and the final
+    state are identical to the unsharded path.  Without a mesh, ``state`` is
+    donated (the carry is threaded, not copied).
     """
+    if mesh is None:
+        return _serve_scan_dense(
+            prob, gate_cfg, gate_params, state, dx_seq, z_seq, aq_seq,
+            bw_mult_seq, u_seq, rcfg=rcfg, n_edge=n_edge, n_cloud=n_cloud)
+    return _serve_scan_sharded(
+        prob, gate_cfg, gate_params, state, dx_seq, z_seq, aq_seq,
+        bw_mult_seq, u_seq, rcfg=rcfg, n_edge=n_edge, n_cloud=n_cloud,
+        mesh=mesh, mesh_axis=mesh_axis)
+
+
+@partial(jax.jit, static_argnames=("gate_cfg", "rcfg", "n_edge", "n_cloud"),
+         donate_argnames=("state",))
+def _serve_scan_dense(
+    prob, gate_cfg, gate_params, state, dx_seq, z_seq, aq_seq,
+    bw_mult_seq, u_seq, rcfg: RouterConfig, n_edge: int, n_cloud: int,
+):
     sys = prob.lat.sys
 
     def body(st, xs):
@@ -60,13 +100,93 @@ def serve_scan(
             sys, z, bwm, u, sol["route"], sol["r"], sol["p"], sol["v"],
             n_edge=n_edge, n_cloud=n_cloud,
         )
-        out = {k: met[k] for k in ("delay", "energy", "cost", "accuracy")}
-        out.update({k: sol[k] for k in ("route", "r", "p", "v", "tau")})
+        out = {k: met[k] for k in _MET_KEYS}
+        out.update({k: sol[k] for k in _SOL_KEYS})
         return st, out
 
     return jax.lax.scan(
         body, state, (dx_seq, z_seq, aq_seq, bw_mult_seq, u_seq)
     )
+
+
+@partial(jax.jit, static_argnames=("gate_cfg", "rcfg", "n_edge", "n_cloud",
+                                   "mesh", "mesh_axis"))
+def _serve_scan_sharded(
+    prob, gate_cfg, gate_params, state, dx_seq, z_seq, aq_seq,
+    bw_mult_seq, u_seq, rcfg: RouterConfig, n_edge: int, n_cloud: int,
+    mesh, mesh_axis: str,
+):
+    """One compiled sharded scan over the whole run.
+
+    Per-stream stages run on each device's local shard of M; the cheap
+    cross-task tail (C6 repair + realization, O(M log M)) runs on the
+    all-gathered real-M batch — replicated, hence bit-comparable to the
+    dense path — and the repaired routes are sliced back into the local
+    carry.  The stream axis is padded to a multiple of the device count
+    with dummy streams (no history, zero features) that are dropped from
+    every gathered computation, so any M works on any mesh.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.sharding.compat import pad_leading, shard_map
+
+    sys = prob.lat.sys          # static config — safe to close over
+    m = dx_seq.shape[1]
+    n_dev = mesh.shape[mesh_axis]
+    pad = (-m) % n_dev
+    local_m = (m + pad) // n_dev
+
+    pad_streams = lambda x: jnp.moveaxis(
+        pad_leading(jnp.moveaxis(x, 1, 0), pad), 0, 1)
+    dx_seq, z_seq, aq_seq = map(pad_streams, (dx_seq, z_seq, aq_seq))
+    state = RouterState(
+        prev_route=pad_leading(state.prev_route, pad, value=-1),
+        prev_tau=pad_leading(state.prev_tau, pad),
+        gate=jax.tree_util.tree_map(lambda x: pad_leading(x, pad), state.gate),
+    )
+
+    def shard_body(pb, gp, st_l, dx_l, z_l, aq_l, bwm_seq, u_seq_):
+        lat = pb.lat
+
+        def body(st, xs):
+            dx, z, aq, bwm, u = xs
+            new_gate, taus, sol = route_segment(
+                pb, gate_cfg, gp, st, dx, z, aq, rcfg)
+            # cross-task tail on the gathered REAL batch (padding dropped):
+            # identical arithmetic to the dense path on every device
+            gather = lambda x: jax.lax.all_gather(
+                x, mesh_axis, axis=0, tiled=True)[:m]
+            z_g, aq_g = gather(z), gather(aq)
+            sol_g = {k: gather(v) for k, v in sol.items()}
+            sol_g, _ = enforce_bandwidth(lat, sol_g, z_g, aq_g,
+                                         rounds=rcfg.repair_rounds)
+            met = realize_rounds(
+                sys, z_g, bwm, u, sol_g["route"], sol_g["r"], sol_g["p"],
+                sol_g["v"], n_edge=n_edge, n_cloud=n_cloud,
+            )
+            out = {k: met[k] for k in _MET_KEYS}
+            out.update({k: sol_g[k] for k in _SOL_KEYS})
+            # slice this device's shard of the repaired routes back into the
+            # carry (dummy streams keep the no-history marker)
+            route_pad = pad_leading(sol_g["route"].astype(jnp.int32), pad, value=-1)
+            start = jax.lax.axis_index(mesh_axis) * local_m
+            st = RouterState(
+                prev_route=jax.lax.dynamic_slice_in_dim(route_pad, start, local_m),
+                prev_tau=taus.astype(jnp.float32),
+                gate=new_gate,
+            )
+            return st, out
+
+        return jax.lax.scan(body, st_l, (dx_l, z_l, aq_l, bwm_seq, u_seq_))
+
+    final_state, mets = shard_map(
+        shard_body, mesh=mesh,
+        in_specs=(P(), P(), P(mesh_axis), P(None, mesh_axis),
+                  P(None, mesh_axis), P(None, mesh_axis), P(), P()),
+        out_specs=(P(mesh_axis), P()), check_vma=False,
+    )(prob, gate_params, state, dx_seq, z_seq, aq_seq, bw_mult_seq, u_seq)
+    final_state = jax.tree_util.tree_map(lambda x: x[:m], final_state)
+    return final_state, mets
 
 
 def run_scan(
@@ -77,6 +197,7 @@ def run_scan(
     n_rounds: int | None = None,
     rcfg: RouterConfig = RouterConfig(),
     feature_seed: int = 0,
+    mesh=None,
 ):
     """Host wrapper: sample rounds, run ``serve_scan``, aggregate metrics.
 
@@ -84,6 +205,7 @@ def run_scan(
     rounds are sampled first (same rng order), the compiled scan routes and
     realizes them, then observation noise is drawn in one shot exactly like
     ``realize_batch``.  Returns the same scalar metric dict as ``run_batch``.
+    ``mesh`` forwards to ``serve_scan`` (sharded whole-run scan).
     """
     n = n_rounds or sim.sim.n_rounds
     m = sim.sim.n_tasks
@@ -104,6 +226,7 @@ def run_scan(
         jnp.asarray(np.stack([rd["u"] for rd in rnds]), jnp.float32),
         rcfg=rcfg,
         n_edge=sim.sim.n_edge_servers, n_cloud=sim.sim.n_cloud_servers,
+        mesh=mesh,
     )
     aq = np.stack([rd["aq"] for rd in rnds])
     acc, success = sim.observe(np.asarray(mets["accuracy"]), aq)

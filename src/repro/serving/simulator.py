@@ -36,7 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cost_model import SystemConfig, version_flops
+from repro.core.cost_model import SystemConfig, accuracy_at, version_flops
 from repro.core.lattice import DecisionLattice, gflops_table
 
 
@@ -127,10 +127,9 @@ def realize_rounds(sys: SystemConfig, z, bw_mult, u, route, r, p, v, *,
     energy = power[route] * t_comp + sys.transmit_power_w * t_trans
     cost = delay + sys.beta * energy
 
-    acc_flat = lat.accuracy_flat(z)                            # (..., M, F, K)
-    y = lat.flatten_index(route, r, p)
-    af = jnp.take_along_axis(acc_flat, y[..., None, None], axis=-2)[..., 0, :]
-    acc = jnp.take_along_axis(af, v[..., None], axis=-1)[..., 0]
+    # pointwise accuracy at the chosen configs — same formula as the
+    # (..., M, F, K) table, evaluated only at the M gathered entries
+    acc = accuracy_at(sys, z, r, p, v, route)
     return {"delay": delay, "energy": energy, "cost": cost,
             "accuracy": acc, "route": route}
 

@@ -1,11 +1,27 @@
-"""jax-version-compatible ``shard_map``.
+"""jax-version-compatible ``shard_map`` + batch-padding helpers.
 
 jax >= 0.5 exports ``shard_map`` at the top level with a ``check_vma``
 kwarg; older releases keep it under ``jax.experimental`` with ``check_rep``.
 Every shard_map user in the repo (pipeline parallelism, the sharded CCG
-sweep, compressed collectives) goes through this shim.
+sweep, the sharded ``serve_scan``, compressed collectives) goes through this
+shim, and every sharded entry point that rounds a task/stream batch up to
+the device count uses :func:`pad_leading`.
 """
 from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pad_leading(x, pad: int, value=0):
+    """Pad the leading (batch) axis of ``x`` by ``pad`` rows of ``value``.
+
+    The shared idiom behind M-to-any-device-count sharding: pad with inert
+    dummies, shard, slice the real batch back out.
+    """
+    if pad == 0:
+        return x
+    widths = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, widths, constant_values=value)
 
 try:  # jax >= 0.5
     from jax import shard_map as _shard_map

@@ -273,3 +273,166 @@ def test_serve_scan_matches_run_batch_metrics():
     assert set(out_a) == set(out_b)
     for k in out_a:
         np.testing.assert_allclose(out_a[k], out_b[k], atol=1e-5, err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# Unrolled masked CCG vs the while_loop oracle
+# ---------------------------------------------------------------------------
+def _assert_ccg_identical(sol_a, sol_b, msg=""):
+    assert set(sol_a) == set(sol_b)
+    for k in sol_a:
+        np.testing.assert_array_equal(
+            np.asarray(sol_a[k]), np.asarray(sol_b[k]), err_msg=f"{msg}:{k}")
+
+
+def test_unrolled_ccg_matches_while_loop():
+    """Fixed-unroll masked iteration == per-task while_loop: decisions,
+    bounds, and iteration counts bit-identical on a mixed random batch,
+    cold and warm-started."""
+    from repro.core.robust import solve_ccg_while
+
+    rng = np.random.default_rng(99)
+    z = jnp.asarray(rng.uniform(0, 1, 37), jnp.float32)
+    aq = jnp.asarray(rng.uniform(0.5, 0.75, 37), jnp.float32)
+    cold_u = solve_ccg(PROB, z, aq)
+    cold_w = solve_ccg_while(PROB, z, aq)
+    _assert_ccg_identical(cold_u, cold_w, "cold")
+
+    warm_y = LAT.flatten_index(cold_w["route"], cold_w["r"], cold_w["p"])
+    warm_u = solve_ccg(PROB, z, aq, warm_y=warm_y.astype(jnp.int32))
+    warm_w = solve_ccg_while(PROB, z, aq, warm_y=warm_y.astype(jnp.int32))
+    _assert_ccg_identical(warm_u, warm_w, "warm")
+
+
+def test_unrolled_ccg_matches_while_loop_adversarial():
+    """Adversarial lanes: a warm start pointing at an infeasible option
+    (warm miss), a task no configuration can satisfy (margin fallback), and
+    easy tasks mixed in — all bit-identical to the while_loop solver."""
+    from repro.core.robust import solve_ccg_while
+
+    z = jnp.asarray([0.5, 0.9, 0.05, 0.7], jnp.float32)
+    aq = jnp.asarray([0.6, 0.99, 0.5, 0.65], jnp.float32)   # task 1 infeasible
+    # task 0: warm miss (y=0 is the cheapest, generally infeasible config);
+    # task 1: warm miss on an all-infeasible task; others: no warm start
+    warm_y = jnp.asarray([0, 0, -1, -1], jnp.int32)
+    sol_u = solve_ccg(PROB, z, aq, warm_y=warm_y)
+    sol_w = solve_ccg_while(PROB, z, aq, warm_y=warm_y)
+    _assert_ccg_identical(sol_u, sol_w, "adversarial")
+    assert np.asarray(sol_u["infeasible"]).tolist() == [False, True, False, False]
+
+
+def test_unrolled_ccg_matches_while_loop_p1_degenerate():
+    """Γ=0 leaves a single (all-zero) pole: the unroll collapses to
+    min(max_iters, 2) steps and must still match the while_loop solver."""
+    from repro.core.robust import solve_ccg_while
+
+    prob1 = RobustProblem.build(SystemConfig(gamma=0))
+    assert prob1.poles.shape[0] == 1
+    rng = np.random.default_rng(3)
+    z = jnp.asarray(rng.uniform(0, 1, 11), jnp.float32)
+    aq = jnp.asarray(rng.uniform(0.5, 0.75, 11), jnp.float32)
+    _assert_ccg_identical(
+        solve_ccg(prob1, z, aq), solve_ccg_while(prob1, z, aq), "p1")
+    assert int(np.asarray(solve_ccg(prob1, z, aq)["iters"]).max()) <= 2
+
+
+def test_unrolled_ccg_slab_master_paths_identical():
+    """The slab-master op (ref and Pallas-interpret) and the incremental-η
+    jnp master produce identical solutions — the three master
+    implementations are interchangeable."""
+    rng = np.random.default_rng(17)
+    z = jnp.asarray(rng.uniform(0, 1, 19), jnp.float32)
+    aq = jnp.asarray(rng.uniform(0.5, 0.75, 19), jnp.float32)
+    auto = solve_ccg(PROB, z, aq)
+    _assert_ccg_identical(auto, solve_ccg(PROB, z, aq, force="ref"), "ref")
+    _assert_ccg_identical(auto, solve_ccg(PROB, z, aq, force="pallas"), "pallas")
+
+
+# ---------------------------------------------------------------------------
+# End-to-end sharded serve_scan
+# ---------------------------------------------------------------------------
+def test_serve_scan_accepts_host_mesh():
+    """On the 1-device host mesh the sharded path must agree with dense."""
+    from repro.core.robust import RobustProblem as RP
+    from repro.serving.scan import serve_scan
+
+    m, r = 6, 3
+    rng = np.random.default_rng(21)
+    gcfg = GateConfig(d_feature=feature_dim())
+    gparams = init_params(gate_specs(gcfg), jax.random.PRNGKey(0))
+    mesh = jax.make_mesh((jax.device_count(),), ("data",))
+    dx = jnp.asarray(rng.normal(size=(r, m, feature_dim())), jnp.float32)
+    z = jnp.asarray(rng.uniform(0, 1, (r, m)), jnp.float32)
+    aq = jnp.asarray(rng.uniform(0.5, 0.7, (r, m)), jnp.float32)
+    bwm = jnp.asarray(rng.uniform(0.8, 1.0, (r, 2)), jnp.float32)
+    u = jnp.asarray(rng.uniform(0, 0.3, (r, 5)), jnp.float32)
+
+    st_a, met_a = serve_scan(PROB, gcfg, gparams, init_router_state(gcfg, m),
+                             dx, z, aq, bwm, u)
+    st_b, met_b = serve_scan(PROB, gcfg, gparams, init_router_state(gcfg, m),
+                             dx, z, aq, bwm, u, mesh=mesh)
+    assert set(met_a) == set(met_b)
+    for k in met_a:
+        np.testing.assert_allclose(np.asarray(met_a[k]), np.asarray(met_b[k]),
+                                   atol=1e-5, err_msg=k)
+    np.testing.assert_array_equal(np.asarray(st_a.prev_route),
+                                  np.asarray(st_b.prev_route))
+
+
+def test_serve_scan_sharded_multidevice():
+    """4 fake host devices: the whole-run sharded scan (gate + Stage-1 +
+    unrolled CCG sharded over streams, C6 + realization on the gathered real
+    batch) reproduces the dense metrics and final state for M=13 (padding:
+    13 streams over 4 devices) and M=16 (exact split).  Subprocess because
+    the device count locks at first jax init."""
+    import subprocess
+    import sys
+    import textwrap
+
+    script = textwrap.dedent(
+        """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+        from repro.core.cost_model import SystemConfig
+        from repro.core.features import feature_dim
+        from repro.core.gating import GateConfig, gate_specs
+        from repro.core.robust import RobustProblem
+        from repro.core.router import init_router_state
+        from repro.models.params import init_params
+        from repro.serving.scan import serve_scan
+
+        prob = RobustProblem.build(SystemConfig())
+        gcfg = GateConfig(d_feature=feature_dim())
+        gp = init_params(gate_specs(gcfg), jax.random.PRNGKey(0))
+        mesh = jax.make_mesh((4,), ("data",))
+        for m in (13, 16):  # 13: padding path; 16: exact split
+            rng = np.random.default_rng(m)
+            r = 4
+            dx = jnp.asarray(rng.normal(size=(r, m, feature_dim())), jnp.float32)
+            z = jnp.asarray(rng.uniform(0, 1, (r, m)), jnp.float32)
+            aq = jnp.asarray(rng.uniform(0.5, 0.7, (r, m)), jnp.float32)
+            bwm = jnp.asarray(rng.uniform(0.8, 1.0, (r, 2)), jnp.float32)
+            u = jnp.asarray(rng.uniform(0, 0.3, (r, 5)), jnp.float32)
+            st_a, met_a = serve_scan(prob, gcfg, gp, init_router_state(gcfg, m),
+                                     dx, z, aq, bwm, u)
+            st_b, met_b = serve_scan(prob, gcfg, gp, init_router_state(gcfg, m),
+                                     dx, z, aq, bwm, u, mesh=mesh)
+            assert set(met_a) == set(met_b)
+            for k in met_a:
+                np.testing.assert_allclose(
+                    np.asarray(met_a[k]), np.asarray(met_b[k]), atol=1e-5,
+                    err_msg=f"M={m}:{k}")
+            np.testing.assert_array_equal(np.asarray(st_a.prev_route),
+                                          np.asarray(st_b.prev_route))
+            np.testing.assert_allclose(np.asarray(st_a.gate.h),
+                                       np.asarray(st_b.gate.h), atol=1e-5)
+        print("OK")
+        """
+    )
+    out = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                         text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "OK" in out.stdout

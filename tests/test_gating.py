@@ -104,3 +104,31 @@ def test_motion_features_track_motion_level():
     f_slow = motion_features(jnp.asarray(slow))[:, -3]   # mean-diff stat
     f_fast = motion_features(jnp.asarray(fast))[:, -3]
     assert float(f_fast.mean()) > float(f_slow.mean())
+
+
+def test_resync_cadence_one_matches_looped_oracle():
+    """``resync_period=1`` recomputes the running Σ/Σ² from the exact ring
+    buffer every step, so the batched incremental volatility is drift-free:
+    the running sums equal a fresh buffer scan bitwise at every step, and the
+    taus match the looped per-stream ``gate_step`` oracle."""
+    from repro.core.gating import gate_step, gate_step_batch, init_batch_state
+
+    cfg = GateConfig(d_feature=8, d_hidden=16, var_window=4, resync_period=1)
+    p = init_params(gate_specs(cfg), jax.random.PRNGKey(4))
+    steps, m = 9, 3
+    dxs = jax.random.normal(jax.random.PRNGKey(5), (steps, m, cfg.d_feature))
+
+    states = [init_state(cfg) for _ in range(m)]
+    st = init_batch_state(cfg, m)
+    for t in range(steps):
+        st, (tau, _) = gate_step_batch(cfg, p, st, dxs[t])
+        # every step: the incremental sums ARE the exact buffer reduction
+        np.testing.assert_array_equal(
+            np.asarray(st.var_sum), np.asarray(st.var_buf.sum(axis=1)))
+        np.testing.assert_array_equal(
+            np.asarray(st.var_sumsq),
+            np.asarray(jnp.square(st.var_buf).sum(axis=1)))
+        for i in range(m):
+            states[i], (tau_ref, _) = gate_step(cfg, p, states[i], dxs[t, i])
+            np.testing.assert_allclose(
+                float(tau[i]), float(tau_ref), atol=1e-5)

@@ -194,3 +194,47 @@ def test_gate_kernel_matches_model_cell():
     h_ref, tau_ref, g_ref = gate_cell_ref(dx[None], st.h[None], vol[None], p)
     np.testing.assert_allclose(new_state.h, h_ref[0], atol=1e-5, rtol=1e-5)
     np.testing.assert_allclose(tau, tau_ref[0], atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("m,p,f,bm,bf", [
+    (16, 16, 50, 8, 32),    # M and F both padded (50 % 32 != 0)
+    (13, 16, 50, 8, 16),    # odd M: padding path
+    (8, 1, 50, 8, 64),      # P=1 degenerate pole set, F < block
+    (64, 16, 128, 32, 64),  # exact tiling, multi-tile argmin hand-off
+])
+def test_ccg_master(m, p, f, bm, bf):
+    """Pallas masked CCG master step (interpret) == jnp oracle, including the
+    empty-scenario-set (η=0) and all-infeasible (obj=BIG) lanes and argmin
+    ties across F tiles."""
+    from repro.kernels.ccg_master.kernel import ccg_master as ccg_master_pallas
+    from repro.kernels.ccg_master.ops import ccg_master
+    from repro.kernels.ccg_master.ref import ccg_master_ref
+
+    ks = jax.random.split(KEY, 4)
+    rec = jax.random.uniform(ks[0], (m, p, f), jnp.float32, 0.0, 5.0)
+    scen = (jax.random.uniform(ks[1], (m, p)) > 0.5).astype(jnp.float32)
+    scen = scen.at[0].set(0.0)                    # empty scenario set lane
+    fs_ok = jax.random.uniform(ks[2], (m, f)) > 0.3
+    fs_ok = fs_ok.at[1].set(False)                # all-infeasible lane
+    c1 = jax.random.uniform(ks[3], (f,), jnp.float32, 0.0, 1.0)
+
+    y_ref, od_ref = ccg_master_ref(rec, scen, fs_ok, c1)
+    y, od = ccg_master(rec, scen, fs_ok, c1, block_m=bm, block_f=bf,
+                       force="pallas")
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y_ref))
+    np.testing.assert_array_equal(np.asarray(od), np.asarray(od_ref))
+
+    # tie-breaking: duplicate the minimum across tiles -> lowest index wins
+    rec_t = jnp.zeros((4, p, f))
+    c1_t = jnp.zeros((f,)).at[jnp.asarray([3, f - 2])].set(-1.0)
+    y_t, _ = ccg_master(rec_t, jnp.zeros((4, p)), jnp.ones((4, f), bool), c1_t,
+                        block_m=bm, block_f=bf, force="pallas")
+    assert np.all(np.asarray(y_t) == 3)
+
+    # direct kernel call on exact tiles (no ops padding) as well
+    if m % bm == 0 and f % bf == 0:
+        y_k, od_k = ccg_master_pallas(
+            rec, scen, fs_ok.astype(jnp.float32), c1,
+            block_m=bm, block_f=bf, interpret=True)
+        np.testing.assert_array_equal(np.asarray(y_k), np.asarray(y_ref))
+        np.testing.assert_array_equal(np.asarray(od_k), np.asarray(od_ref))
