@@ -24,6 +24,10 @@ Prints ``name,us_per_call,derived`` CSV lines (the repo benchmark contract):
                            between the two on a fixed seed
   sim/realize_batch_per_round — amortized per-round cost when whole rounds
                            are realized in one vmapped batch
+  sweep/{stage}@M{m}     — ``--streams-sweep`` rows: per-stage latency (gate,
+                           stage1, ccg, repair, and the full route_step) at
+                           each stream count M, with us_per_segment derived so
+                           batch amortization is measured, not assumed
 
 With ``--json`` the same rows are written to ``BENCH_router.json`` so every
 PR records the perf trajectory (CI uploads it as an artifact).  With
@@ -129,6 +133,92 @@ def bench_route_step(streams: int, steps: int, window: int = 8,
     ]
 
 
+def bench_streams_sweep(sweep, steps: int):
+    """Stream-count scaling of the table-free hot path: per-stage µs at each
+    M plus the full ``route_step``.  The per-segment µs in ``derived`` is the
+    checked-in evidence that large-M batches amortize (sub-linear scaling):
+    ``per_seg_vs_M{m0}`` is the ratio of this row's µs/segment to the
+    smallest-M row's — < 1.0 means batching wins."""
+    from repro.core.cost_model import SystemConfig
+    from repro.core.features import feature_dim
+    from repro.core.gating import GateConfig, gate_specs, gate_step_batch, init_batch_state
+    from repro.core.robust import RobustProblem, solve_ccg
+    from repro.core.router import (
+        RouterEngine,
+        enforce_bandwidth,
+        stage1_configure,
+    )
+    from repro.models.params import init_params
+
+    sys_ = SystemConfig()
+    prob = RobustProblem.build(sys_)
+    gcfg = GateConfig(d_feature=feature_dim())
+    gparams = init_params(gate_specs(gcfg), jax.random.PRNGKey(0))
+
+    gate_j = jax.jit(lambda st, dx: gate_step_batch(gcfg, gparams, st, dx))
+    stage1_j = jax.jit(
+        lambda taus, z, aq, pr, pt: stage1_configure(sys_, taus, z, aq, pr, pt))
+    repair_j = jax.jit(
+        lambda sol, z, aq: enforce_bandwidth(prob.lat, sol, z, aq))
+
+    rows = []
+    base_per_seg = {}
+    m0 = sweep[0]
+    for m in sweep:
+        rng = np.random.default_rng(m)
+        z = jnp.asarray(rng.uniform(0, 1, m), jnp.float32)
+        aq = jnp.asarray(rng.uniform(0.5, 0.75, m), jnp.float32)
+        dx = jnp.asarray(rng.normal(size=(m, feature_dim())), jnp.float32)
+        taus = jnp.asarray(rng.uniform(0, 1, m), jnp.float32)
+        prev_r = -jnp.ones((m,), jnp.int32)
+        prev_t = jnp.zeros((m,), jnp.float32)
+        iters = max(steps // 3, 3)
+
+        gate_st = init_batch_state(gcfg, m)
+
+        def bench_gate():
+            st, (tau, _) = gate_j(gate_st, dx)
+            jax.block_until_ready(tau)
+
+        def bench_stage1():
+            route, r = stage1_j(taus, z, aq, prev_r, prev_t)
+            jax.block_until_ready(route)
+
+        def bench_ccg():
+            sol = solve_ccg(prob, z, aq)
+            jax.block_until_ready(sol["route"])
+
+        sol0 = solve_ccg(prob, z, aq)
+        sol_fixed = {k: sol0[k] for k in ("route", "r", "p", "v")}
+
+        def bench_repair():
+            fixed, _ = repair_j(sol_fixed, z, aq)
+            jax.block_until_ready(fixed["r"])
+
+        engine = RouterEngine(prob, gcfg, gparams, n_streams=m)
+
+        def bench_step():
+            sol = engine.step(dx, z, aq)
+            jax.block_until_ready(sol["route"])
+
+        stages = [("gate", bench_gate), ("stage1", bench_stage1),
+                  ("ccg", bench_ccg), ("repair", bench_repair),
+                  ("route_step", bench_step)]
+        for stage, fn in stages:
+            us = _timeit(fn, iters)
+            per_seg = us / m
+            derived = f"streams={m},us_per_segment={per_seg:.3f}"
+            if stage == "route_step":
+                derived += f",segments_per_s={m / (us / 1e6):.0f}"
+            if m != m0 and stage in base_per_seg:
+                derived += (f",per_seg_vs_M{m0}="
+                            f"{per_seg / base_per_seg[stage]:.3f}")
+            else:
+                base_per_seg[stage] = per_seg
+            rows.append((f"sweep/{stage}@M{m}", us, derived))
+    return rows
+
+
 def bench_serve_scan(streams: int, rounds: int, iters: int = 5):
     from repro.core.cost_model import SystemConfig
     from repro.core.features import feature_dim
@@ -227,6 +317,11 @@ def main():
     ap.add_argument("--steps", type=int, default=30)
     ap.add_argument("--tasks", type=int, default=200)
     ap.add_argument("--scan-rounds", type=int, default=16)
+    ap.add_argument("--streams-sweep", default="64,256,512,1024,4096",
+                    help="comma-separated stream counts for the per-stage "
+                         "large-M scaling rows (empty string disables; 512 "
+                         "stays in the default so baseline refreshes keep "
+                         "the M=512 rows CI checks against)")
     ap.add_argument("--json", action="store_true",
                     help="also write BENCH_router.json next to the repo root")
     ap.add_argument("--check", metavar="BASELINE",
@@ -238,6 +333,9 @@ def main():
     rows += bench_route_step(args.streams, args.steps)
     rows += bench_serve_scan(args.streams, args.scan_rounds)
     rows += bench_realize(args.tasks)
+    if args.streams_sweep:
+        sweep = [int(s) for s in args.streams_sweep.split(",")]
+        rows += bench_streams_sweep(sweep, args.steps)
 
     print("name,us_per_call,derived")
     for name, us, derived in rows:
@@ -249,6 +347,7 @@ def main():
         out = {
             "config": {"streams": args.streams, "steps": args.steps,
                        "tasks": args.tasks, "scan_rounds": args.scan_rounds,
+                       "streams_sweep": args.streams_sweep,
                        "backend": jax.default_backend()},
             "benchmarks": [
                 {"name": name, "us_per_call": round(us, 2), "derived": derived,

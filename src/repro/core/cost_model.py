@@ -68,6 +68,21 @@ def version_flops(sys: SystemConfig, tier: int, k: int, res_p: int) -> float:
 # ---------------------------------------------------------------------------
 # Vectorized tables over the full decision lattice
 # ---------------------------------------------------------------------------
+def res_norm(sys: SystemConfig) -> jnp.ndarray:
+    """(N,) resolutions normalized by the 1080p reference — the accuracy
+    formula's r coordinate.  Single source of the normalization: every
+    accuracy path (broadcast table, pointwise gathers, Stage-1 slice, the
+    lattice's flat coordinate vectors) divides the same float32 values by
+    the same constant, which is what keeps them bitwise interchangeable."""
+    return jnp.asarray(sys.resolutions, jnp.float32) / 1080.0
+
+
+def fps_norm(sys: SystemConfig) -> jnp.ndarray:
+    """(Z,) frame rates normalized by the 50-FPS reference — the accuracy
+    formula's p coordinate (same single-source contract as res_norm)."""
+    return jnp.asarray(sys.fps_options, jnp.float32) / 50.0
+
+
 def _accuracy_formula(z, r, p, k, tier):
     """Shared accuracy surface f(r, p, v, tier | z) — single source of truth
     for the broadcast table and the pointwise gather (elementwise ops in the
@@ -87,8 +102,8 @@ def accuracy_table(sys: SystemConfig, difficulty):
     difficulty z in [0,1] (content motion) penalizes low fps / low res.
     """
     z = jnp.asarray(difficulty)[..., None, None, None, None]
-    r = jnp.asarray(sys.resolutions, jnp.float32) / 1080.0
-    p = jnp.asarray(sys.fps_options, jnp.float32) / 50.0
+    r = res_norm(sys)
+    p = fps_norm(sys)
     k = jnp.arange(sys.num_versions, dtype=jnp.float32)
     r = r[:, None, None, None]
     p = p[None, :, None, None]
@@ -103,10 +118,22 @@ def accuracy_at(sys: SystemConfig, difficulty, r, p, v, route):
     O(M·N·Z·K·2) broadcast table (the realization hot path gathers exactly
     one entry per task, so it never needs the table)."""
     z = jnp.asarray(difficulty)
-    rn = jnp.asarray(sys.resolutions, jnp.float32)[r] / 1080.0
-    pn = jnp.asarray(sys.fps_options, jnp.float32)[p] / 50.0
+    rn = res_norm(sys)[r]
+    pn = fps_norm(sys)[p]
     return _accuracy_formula(z, rn, pn, v.astype(jnp.float32),
                              route.astype(jnp.float32))
+
+
+def accuracy_stage1(sys: SystemConfig, difficulty):
+    """(M, N) accuracy of the smallest model (v1) on edge at max fps — the
+    ``f[:, :, -1, 0, 0]`` slice of :func:`accuracy_table`, evaluated pointwise
+    so Stage-1 never builds the (M, N, Z, K, 2) table.  Same elementwise ops
+    in the same order as the table, hence bitwise identical to the slice."""
+    z = jnp.asarray(difficulty)[..., None]
+    rn = res_norm(sys)
+    pn = fps_norm(sys)[-1]
+    zero = jnp.float32(0.0)
+    return _accuracy_formula(z, rn, pn, zero, zero)
 
 
 def cost_tables(sys: SystemConfig):

@@ -36,6 +36,8 @@ from repro.core.cost_model import (
     SystemConfig,
     accuracy_table,
     cost_tables,
+    fps_norm,
+    res_norm,
     version_flops,
 )
 
@@ -64,7 +66,8 @@ def _gflops_table(sys: SystemConfig) -> np.ndarray:
 
 @partial(
     jax.tree_util.register_dataclass,
-    data_fields=("c1", "b2", "bw", "c1_flat", "b2_flat", "bw_flat", "u_dev"),
+    data_fields=("c1", "b2", "bw", "c1_flat", "b2_flat", "bw_flat", "u_dev",
+                 "rn_flat", "pn_flat", "tier_flat"),
     meta_fields=("sys",),
 )
 @dataclasses.dataclass(frozen=True)
@@ -77,6 +80,13 @@ class DecisionLattice:
     b2_flat: jnp.ndarray  # (F, K)       route-major flat second-stage cost
     bw_flat: jnp.ndarray  # (F,)         route-major flat bandwidth draw
     u_dev: jnp.ndarray    # (K,)         version deviation vector ũ
+    # normalized accuracy-formula coordinates of every flat option — lets the
+    # table-free encoders evaluate f(z, y, k) directly in the flat layout
+    # (gathers of the same normalized vectors the broadcast table uses, so
+    # pointwise evaluation stays bitwise identical to the table)
+    rn_flat: jnp.ndarray    # (F,) resolution / 1080
+    pn_flat: jnp.ndarray    # (F,) fps / 50
+    tier_flat: jnp.ndarray  # (F,) route as float (0 = edge, 1 = cloud)
 
     # ------------------------------------------------------------------
     @classmethod
@@ -147,6 +157,11 @@ def _build_cached(sys: SystemConfig) -> DecisionLattice:
     c1_flat = jnp.moveaxis(c1, -1, 0).reshape(f)
     b2_flat = jnp.moveaxis(b2, -1, 0).reshape(f, k)
     bw_flat = jnp.moveaxis(bw, -1, 0).reshape(f)
+    nz = sys.n_res * sys.n_fps
+    ys = jnp.arange(f)
+    route = ys // nz
+    r_idx = (ys % nz) // sys.n_fps
+    p_idx = ys % sys.n_fps
     return DecisionLattice(
         sys=sys,
         c1=c1,
@@ -156,6 +171,9 @@ def _build_cached(sys: SystemConfig) -> DecisionLattice:
         b2_flat=b2_flat,
         bw_flat=bw_flat,
         u_dev=version_deviations(sys),
+        rn_flat=res_norm(sys)[r_idx],
+        pn_flat=fps_norm(sys)[p_idx],
+        tier_flat=route.astype(jnp.float32),
     )
 
 

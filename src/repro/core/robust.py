@@ -41,6 +41,7 @@ import jax.numpy as jnp
 
 from repro.core.cost_model import SystemConfig
 from repro.core.lattice import DecisionLattice
+from repro.kernels.ccg_encode.ops import ccg_encode
 from repro.kernels.ccg_master.ops import ccg_master
 from repro.kernels.ccg_master.ref import BIG  # shared infeasibility sentinel
 
@@ -58,7 +59,7 @@ def _poles(num_versions: int, gamma: int):
 
 @partial(
     jax.tree_util.register_dataclass,
-    data_fields=("lat", "poles", "rec_table"),
+    data_fields=("lat", "poles", "rec_table", "b2_scaled"),
     meta_fields=(),
 )
 @dataclasses.dataclass(frozen=True)
@@ -70,6 +71,10 @@ class RobustProblem:
     # lattice costs, poles, and ũ), built once; the per-task CCG sweep then
     # reduces to encoding its (F, K) feasibility mask and gathering.
     rec_table: jnp.ndarray
+    # (P, F, K) pole-scaled second-stage costs b2·(1+u) — the unexpanded form
+    # of the same lookup; the Pallas encode kernel keeps this slab
+    # VMEM-resident and min-folds it instead of gathering rec_table
+    b2_scaled: jnp.ndarray
 
     @classmethod
     def build(cls, sys: SystemConfig):
@@ -82,7 +87,8 @@ class RobustProblem:
         rec_table = jnp.where(
             masks[None, None], b2_scaled[:, :, None, :], BIG
         ).min(axis=-1)                                        # (P, F, 2^K)
-        return cls(lat=lat, poles=poles, rec_table=rec_table)
+        return cls(lat=lat, poles=poles, rec_table=rec_table,
+                   b2_scaled=b2_scaled)
 
     @property
     def sys(self) -> SystemConfig:
@@ -104,11 +110,12 @@ class RobustProblem:
 
 
 def _encode_tasks(prob: RobustProblem, difficulty, acc_req):
-    """Per-task CCG inputs: feasibility masks + the gathered recourse slab.
+    """Table-based per-task CCG inputs — the encode ORACLE.
 
-    The scaled recourse table b2·(1+u) over all poles is task-independent
-    (hoisted onto ``RobustProblem``), so each task only encodes its (F, K)
-    feasibility mask as a bitmask and gathers — no per-task (P, F, K) sweep.
+    Builds the full (M, F, K) accuracy tensor via the broadcast table, then
+    derives the feasibility masks and gathers the recourse slab.  Kept for
+    the while_loop oracle and the ``ccg_encode`` parity tests; the serving
+    hot path uses :func:`_encode_tasks_fused` (bit-identical, table-free).
     Returns ``(f_flat, feas_f, fs_ok, rec_all)`` with shapes
     ((M, F, K), (M, F, K), (M, F), (M, P, F)).
     """
@@ -124,12 +131,35 @@ def _encode_tasks(prob: RobustProblem, difficulty, acc_req):
     return f_flat, feas_f, feas_f.any(axis=-1), rec_all
 
 
-def _finish_solution(prob: RobustProblem, f_flat, feas_f, rec_all, y_f):
+def _encode_tasks_fused(prob: RobustProblem, difficulty, acc_req,
+                        force: str = "auto"):
+    """Table-free per-task CCG inputs via the fused ``ccg_encode`` kernel.
+
+    No (M, N, Z, K, 2) or (M, F, K) accuracy tensor is built anywhere:
+    the kernel/ref evaluate the accuracy formula per version directly in the
+    flat layout, emit the (M, F) feasible-version bitmask ``code``, the
+    (M, P, F) recourse slab, and the flat accuracy argmax ``best`` consumed
+    by the all-infeasible fallback.  Bit-identical to :func:`_encode_tasks`
+    (parity-tested in tests/test_kernels.py).
+    """
+    lat = prob.lat
+    return ccg_encode(
+        jnp.asarray(difficulty, jnp.float32), jnp.asarray(acc_req, jnp.float32),
+        lat.rn_flat, lat.pn_flat, lat.tier_flat,
+        prob.b2_scaled, prob.rec_table,
+        margin=lat.sys.acc_margin_robust, num_versions=lat.sys.num_versions,
+        force=force,
+    )
+
+
+def _finish_solution(prob: RobustProblem, code, best, rec_all, y_f):
     """Shared epilogue: final recourse v*, infeasibility fallback, unflatten.
 
-    y_f: (M,) converged first-stage indices.  Picks v* at the worst pole of
+    y_f: (M,) converged first-stage indices; code: the (M, F) feasibility
+    bitmask; best: (M,) flat accuracy argmax.  Picks v* at the worst pole of
     y_f, then applies the graceful margin relaxation (tasks infeasible *with*
-    the robust margin fall back to the max-accuracy configuration).
+    the robust margin fall back to the max-accuracy configuration).  All
+    per-task work is O(M) gathers and bit tests — no accuracy table.
     """
     lat = prob.lat
     sys = lat.sys
@@ -137,13 +167,13 @@ def _finish_solution(prob: RobustProblem, f_flat, feas_f, rec_all, y_f):
     sp_vals = jnp.take_along_axis(rec_all, y_f[:, None, None], axis=2)[..., 0]
     worst = sp_vals.argmax(axis=1)                    # (M,)
     u = prob.poles[worst] * prob.u_dev[None]          # (M, K)
-    feas_y = jnp.take_along_axis(feas_f, y_f[:, None, None], axis=1)[:, 0]
+    code_y = jnp.take_along_axis(code, y_f[:, None], axis=1)[:, 0]
+    feas_y = ((code_y[:, None] >> jnp.arange(sys.num_versions)[None]) & 1) > 0
     vals = jnp.where(feas_y, b2[y_f] * (1.0 + u), BIG)
     v_star = vals.argmin(axis=1)
-    none_ok = ~feas_f.any(axis=(1, 2))
-    best_acc = f_flat.reshape(f_flat.shape[0], -1).argmax(axis=1)
-    y_f = jnp.where(none_ok, best_acc // sys.num_versions, y_f)
-    v_star = jnp.where(none_ok, best_acc % sys.num_versions, v_star)
+    none_ok = ~(code > 0).any(axis=1)
+    y_f = jnp.where(none_ok, best // sys.num_versions, y_f)
+    v_star = jnp.where(none_ok, best % sys.num_versions, v_star)
     route, r_idx, p_idx = lat.unflatten_index(y_f)
     return route, r_idx, p_idx, v_star, none_ok
 
@@ -171,9 +201,12 @@ def solve_ccg(prob: RobustProblem, difficulty, acc_req, max_iters: int = 8,
     TPU the same master is computed incrementally: η is a running (M, F) max
     folded in as each pole is generated (max is exact in floats, so the
     running form is bit-identical to the masked slab reduction) — O(M·F) per
-    iteration instead of O(M·P·F).  ``force`` pins the master implementation
-    for tests: "pallas" (interpret off-TPU) / "ref" exercise the slab op,
-    "auto" picks the backend default.
+    iteration instead of O(M·P·F).  The per-task inputs come from the fused
+    table-free ``ccg_encode`` kernel (accuracy formula → feasibility bitmask
+    → recourse slab in one pass; no (M, F, K) tensor anywhere).  ``force``
+    pins both the encode and master implementations for tests: "pallas"
+    (interpret off-TPU) / "ref" exercise the kernel ops, "auto" picks the
+    backend default.
 
     ``warm_y``: optional (M,) flat first-stage warm starts (the Stage-1
     route).  When given, each task's scenario set is seeded with the exact
@@ -183,8 +216,10 @@ def solve_ccg(prob: RobustProblem, difficulty, acc_req, max_iters: int = 8,
     """
     lat = prob.lat
     c1 = lat.c1_flat                                  # (F,)
-    f_flat, feas_f, fs_ok, rec_all = _encode_tasks(prob, difficulty, acc_req)
-    m = feas_f.shape[0]
+    code, rec_all, best = _encode_tasks_fused(prob, difficulty, acc_req,
+                                              force=force)
+    fs_ok = code > 0                                  # (M, F)
+    m = code.shape[0]
     n_poles = prob.poles.shape[0]
     if warm_y is None:
         warm_y = -jnp.ones(m, jnp.int32)
@@ -255,7 +290,7 @@ def solve_ccg(prob: RobustProblem, difficulty, acc_req, max_iters: int = 8,
         done = jnp.where(live, (up_new - od_new) <= theta, done)
 
     route, r_idx, p_idx, v_star, none_ok = _finish_solution(
-        prob, f_flat, feas_f, rec_all, y_best)
+        prob, code, best, rec_all, y_best)
     return {
         "route": route, "r": r_idx, "p": p_idx, "v": v_star,
         "o_up": o_up, "o_down": o_down, "iters": iters, "infeasible": none_ok,

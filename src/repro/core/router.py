@@ -31,7 +31,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.cost_model import SystemConfig
+from repro.core.cost_model import SystemConfig, accuracy_at, accuracy_stage1
 from repro.core.gating import (
     GateBatchState,
     GateConfig,
@@ -75,12 +75,16 @@ def apply_temporal_consistency(route, prev_route, taus, prev_tau, rcfg: RouterCo
 # ---------------------------------------------------------------------------
 def stage1_configure(sys_or_lat, taus, difficulty, acc_req, prev_route, prev_tau,
                      rcfg: RouterConfig = RouterConfig()):
-    """Vectorized Alg. 1.  All inputs (M,).  Returns route, r_idx warm starts."""
-    lat = _as_lattice(sys_or_lat)
-    sys = lat.sys
-    f = lat.accuracy(difficulty)                         # (M, N, Z, K, 2)
-    # f_i(r, v1) at the max fps, per tier (Alg.1 line 3: guided by τ)
-    f_edge_v1 = f[:, :, -1, 0, 0]                        # (M, N)
+    """Vectorized Alg. 1.  All inputs (M,).  Returns route, r_idx warm starts.
+
+    Table-free: the only accuracy values Alg. 1 consults are f_i(r, v1) on
+    edge at max fps, so the shared formula is evaluated directly on that
+    (M, N) slice (bitwise identical to slicing the broadcast table, which
+    this path historically built and threw 99.6% of away).
+    """
+    sys = sys_or_lat.sys if isinstance(sys_or_lat, DecisionLattice) else sys_or_lat
+    # f_i(r, v1) at the max fps, edge tier (Alg.1 line 3: guided by τ)
+    f_edge_v1 = accuracy_stage1(sys, difficulty)         # (M, N)
     feasible_edge = f_edge_v1 >= acc_req[:, None]
     # smallest feasible resolution on edge (Alg.1 lines 4-5)
     first_ok = jnp.argmax(feasible_edge, axis=1)
@@ -104,29 +108,42 @@ def enforce_bandwidth(sys_or_lat, sol, difficulty, acc_req, total_budget=None,
     prefix (by descending gain) needed to clear the excess over the budget —
     instead of one scalar ``.at[pick].set`` demotion per round, so the repair
     converges in ~#fidelity-levels rounds independent of the batch size M.
+
+    Table-free: candidate-demotion accuracies are evaluated pointwise at the
+    (r, p_dn) / (r_dn, p) configs via ``accuracy_at`` (bitwise identical to
+    gathering the broadcast table this path used to build), and the
+    round-invariant route-indexed bandwidth columns are hoisted out of the
+    scan body — each round is then two ``take_along_axis`` gathers on the
+    (M, N·Z) panel plus O(M) formula evaluations.
     """
     lat = _as_lattice(sys_or_lat)
     sys = lat.sys
-    bw_tab = lat.bw                                      # (N, Z, 2) Mbps
-    f = lat.accuracy(difficulty)
     budget = sys.total_bw_mbps if total_budget is None else total_budget
 
     margin = sys.acc_margin_robust
     m = sol["r"].shape[0]
+    nz = sys.n_fps
+    # C6 demotion never flips the route, so the per-task (N, Z) bandwidth
+    # panel for its route is round-invariant: hoist the route gather out of
+    # the scan body once, flat (r·Z + p)-indexed inside
+    bw_panel = jnp.moveaxis(lat.bw, -1, 0)[sol["route"]]   # (M, N, Z)
+    bw_panel = bw_panel.reshape(bw_panel.shape[0], -1)     # (M, N·Z)
+    take_bw = lambda r, p: jnp.take_along_axis(
+        bw_panel, (r * nz + p)[:, None], axis=1)[:, 0]
 
     def round_fn(state, _):
         r, p = state
-        bw = bw_tab[r, p, sol["route"]]
+        bw = take_bw(r, p)
         excess = bw.sum() - budget
         # candidate demotion: prefer dropping fps, then resolution
         p_dn = jnp.maximum(p - 1, 0)
         r_dn = jnp.maximum(r - 1, 0)
-        f_pdn = f[jnp.arange(m), r, p_dn, sol["v"], sol["route"]]
-        f_rdn = f[jnp.arange(m), r_dn, p, sol["v"], sol["route"]]
+        f_pdn = accuracy_at(sys, difficulty, r, p_dn, sol["v"], sol["route"])
+        f_rdn = accuracy_at(sys, difficulty, r_dn, p, sol["v"], sol["route"])
         can_p = (p > 0) & (f_pdn >= acc_req + margin)
         can_r = (r > 0) & (f_rdn >= acc_req + margin)
-        gain_p = bw - bw_tab[r, p_dn, sol["route"]]
-        gain_r = bw - bw_tab[r_dn, p, sol["route"]]
+        gain_p = bw - take_bw(r, p_dn)
+        gain_r = bw - take_bw(r_dn, p)
         gain = jnp.where(can_p, gain_p, jnp.where(can_r, gain_r, -BIG))
         # top-k demotion: in descending-gain order, demote tasks while the
         # cumulative reclaimed bandwidth is still short of the excess
@@ -169,6 +186,39 @@ def init_router_state(gate_cfg: GateConfig, n_streams: int) -> RouterState:
     )
 
 
+def _two_stage_select(
+    prob: RobustProblem,
+    taus,                 # (M,) gate scores for THIS segment
+    difficulty,           # (M,)
+    acc_req,              # (M,)
+    prev_route,           # (M,)
+    prev_tau,             # (M,)
+    rcfg: RouterConfig,
+):
+    """Shared Stage-1 → warm-started CCG → temporal-consistency core.
+
+    Both the streaming step (``route_segment``) and the stateless windowed
+    ``route`` run exactly this selection once the gate scores are in hand,
+    so routing decisions are identical by construction between the two entry
+    points.  Returns the pre-C6 solution with tau / warm diagnostics.
+    """
+    lat = prob.lat
+    warm_route, warm_r = stage1_configure(
+        lat, taus, difficulty, acc_req, prev_route, prev_tau, rcfg
+    )
+    # Stage-1 picks (route, r) at max fps — seed CCG with that configuration
+    warm_y = lat.flatten_index(warm_route, warm_r, lat.sys.n_fps - 1)
+    sol = solve_ccg(prob, difficulty, acc_req, warm_y=warm_y.astype(jnp.int32))
+    # Stage-1 consistency overrides Stage-2 route flips that the gate forbids
+    sol = dict(sol, route=apply_temporal_consistency(
+        sol["route"], prev_route, taus, prev_tau, rcfg
+    ))
+    sol["tau"] = taus
+    sol["warm_route"] = warm_route
+    sol["warm_r"] = warm_r
+    return sol
+
+
 def route_segment(
     prob: RobustProblem,
     gate_cfg: GateConfig,
@@ -186,23 +236,12 @@ def route_segment(
     realization happen after.  Returns ``(new_gate, taus, sol)`` with the
     pre-repair solution (tau / warm diagnostics included).
     """
-    lat = prob.lat
     new_gate, (taus, _gate_means) = gate_step_batch(
         gate_cfg, gate_params, state.gate, dx
     )
-    warm_route, warm_r = stage1_configure(
-        lat, taus, difficulty, acc_req, state.prev_route, state.prev_tau, rcfg
+    sol = _two_stage_select(
+        prob, taus, difficulty, acc_req, state.prev_route, state.prev_tau, rcfg
     )
-    # Stage-1 picks (route, r) at max fps — seed CCG with that configuration
-    warm_y = lat.flatten_index(warm_route, warm_r, lat.sys.n_fps - 1)
-    sol = solve_ccg(prob, difficulty, acc_req, warm_y=warm_y.astype(jnp.int32))
-    # Stage-1 consistency overrides Stage-2 route flips that the gate forbids
-    sol = dict(sol, route=apply_temporal_consistency(
-        sol["route"], state.prev_route, taus, state.prev_tau, rcfg
-    ))
-    sol["tau"] = taus
-    sol["warm_route"] = warm_route
-    sol["warm_r"] = warm_r
     return new_gate, taus, sol
 
 
@@ -318,6 +357,7 @@ class RouterEngine:
 # ---------------------------------------------------------------------------
 # Full two-stage pipeline (windowed / stateless)
 # ---------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("gate_cfg", "rcfg"))
 def route(
     prob: RobustProblem,
     gate_cfg: GateConfig,
@@ -329,7 +369,12 @@ def route(
     prev_tau=None,
     rcfg: RouterConfig = RouterConfig(),
 ):
-    lat = prob.lat
+    """Windowed stateless routing, jit-compiled end to end.
+
+    Scans the gate over the whole (M, T, d) feature window, then runs the
+    same ``_two_stage_select`` + C6 repair as the streaming step — one
+    compiled program instead of an eager op-by-op dispatch chain.
+    """
     m = dx_segments.shape[0]
     if prev_route is None:
         prev_route = -jnp.ones((m,), jnp.int32)
@@ -339,22 +384,10 @@ def route(
     taus_seq, gates, _ = gate_scan_batch(gate_cfg, gate_params, dx_segments)
     taus = taus_seq[:, -1]
 
-    # Stage-1 output is consumed twice: as the CCG warm start (scenario-set
-    # seed, same as the streaming path) and as the warm_route/warm_r
-    # diagnostics in the returned solution.
-    warm_route, warm_r = stage1_configure(
-        lat, taus, difficulty, acc_req, prev_route, prev_tau, rcfg
+    sol = _two_stage_select(
+        prob, taus, difficulty, acc_req, prev_route, prev_tau, rcfg
     )
-    warm_y = lat.flatten_index(warm_route, warm_r, lat.sys.n_fps - 1)
-    sol = solve_ccg(prob, difficulty, acc_req, warm_y=warm_y.astype(jnp.int32))
-    # Stage-1 consistency overrides Stage-2 route flips that the gate forbids
-    sol = dict(sol, route=apply_temporal_consistency(
-        sol["route"], prev_route, taus, prev_tau, rcfg
-    ))
-    sol, bw_hist = enforce_bandwidth(lat, sol, difficulty, acc_req,
+    sol, bw_hist = enforce_bandwidth(prob.lat, sol, difficulty, acc_req,
                                      rounds=rcfg.repair_rounds)
-    sol["tau"] = taus
-    sol["warm_route"] = warm_route
-    sol["warm_r"] = warm_r
     sol["bw_history"] = bw_hist
     return sol

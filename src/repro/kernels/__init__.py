@@ -10,7 +10,10 @@ Validated in interpret mode on CPU; compiled natively on TPU.
   rglru            — blocked RG-LRU recurrence (recurrentgemma)
   temporal_gate    — fused R2E-VID gating cell (paper Eq. 5-6)
   ccg_master       — masked CCG master step (paper Alg. 2 MP1, unrolled solver)
+  ccg_encode       — fused per-task CCG encoding (accuracy -> feasibility
+                     bitmask -> recourse slab, table-free routing hot path)
 """
+from repro.kernels.ccg_encode.ops import ccg_encode  # noqa: F401
 from repro.kernels.ccg_master.ops import ccg_master  # noqa: F401
 from repro.kernels.decode_attention.ops import decode_attention  # noqa: F401
 from repro.kernels.flash_attention.ops import flash_attention  # noqa: F401

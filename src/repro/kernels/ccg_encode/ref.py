@@ -1,0 +1,67 @@
+"""Pure-jnp oracle for the fused per-task CCG encoding (paper Alg. 2 inputs).
+
+Every CCG sweep starts by encoding its task batch: evaluate the accuracy
+surface f(z, y, k) over the flat first-stage options, threshold it into a
+per-option feasible-version bitmask, and gather each (pole, option) recourse
+value from the precomputed (P, F, 2^K) lookup.  The historical path built the
+full (M, F, K) accuracy tensor first; this ref IS the table-free CPU hot
+path: the K model versions are folded in one at a time, so the largest
+accuracy intermediate is a single (M, F) slice and the only (M, ·, ·) tensor
+materialized is the (M, P, F) recourse slab the solver needs anyway.
+
+Outputs are bit-identical to the table route (same ``_accuracy_formula``
+elementwise ops on gathers of the same normalized coordinate vectors, and
+``min``/comparisons are exact in floats); the Pallas kernel must reproduce
+this ref bit-for-bit (covered by tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.cost_model import _accuracy_formula
+from repro.kernels.ccg_master.ref import BIG  # shared infeasibility sentinel
+
+
+def ccg_encode_ref(z, aq, rn_flat, pn_flat, tier_flat, rec_table, margin,
+                   num_versions: int):
+    """Fused task encoding for a CCG batch.
+
+    z/aq: (M,) difficulty and accuracy requirement; rn/pn/tier_flat: (F,)
+    normalized accuracy-formula coordinates of every flat option;
+    rec_table: (P, F, 2^K) recourse lookup; margin: robust accuracy margin.
+
+    Returns ``(code, rec_all, best)``:
+      code    : (M, F) int32 feasible-version bitmask (bit k set iff version
+                k clears A^q + margin at that option); ``code > 0`` is the
+                first-stage feasibility mask
+      rec_all : (M, P, F) per-pole recourse values (BIG where no version fits)
+      best    : (M,) int32 argmax of accuracy over the flat (F·K) space
+                (first-max ties, k minor) — the all-infeasible fallback config
+    """
+    z2 = jnp.asarray(z)[:, None]                         # (M, 1)
+    thr = (jnp.asarray(aq) + margin)[:, None]            # (M, 1)
+    rn = rn_flat[None, :]
+    pn = pn_flat[None, :]
+    tf = tier_flat[None, :]
+    m = z2.shape[0]
+
+    code = jnp.zeros((m, rn_flat.shape[0]), jnp.int32)
+    best_val = jnp.full((m,), -BIG, jnp.float32)
+    best = jnp.zeros((m,), jnp.int32)
+    for k in range(num_versions):
+        f_k = _accuracy_formula(z2, rn, pn, jnp.float32(k), tf)  # (M, F)
+        code = code + jnp.where(f_k >= thr, jnp.int32(1 << k), 0)
+        # running flat argmax (index y·K + k): per-k first max over F, then
+        # strict->/tie-to-lower-index hand-off across k — matches
+        # ``f_flat.reshape(M, -1).argmax(axis=1)`` exactly
+        arg_k = jnp.argmax(f_k, axis=1)
+        val_k = jnp.take_along_axis(f_k, arg_k[:, None], axis=1)[:, 0]
+        flat_k = (arg_k * num_versions + k).astype(jnp.int32)
+        better = (val_k > best_val) | ((val_k == best_val) & (flat_k < best))
+        best = jnp.where(better, flat_k, best)
+        best_val = jnp.where(better, val_k, best_val)
+
+    rec_all = jnp.take_along_axis(
+        rec_table[None], code[:, None, :, None], axis=-1
+    )[..., 0]                                            # (M, P, F)
+    return code, rec_all, best

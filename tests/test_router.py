@@ -290,3 +290,154 @@ def test_realize_batch_matches_per_round_realize():
         got = batched[k]
         want = np.stack([s[k] for s in singles])
         np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Table-free hot path: bit-parity vs the table-based goldens
+# ---------------------------------------------------------------------------
+def test_stage1_accuracy_pointwise_matches_table_slice():
+    """``accuracy_stage1`` == the f[:, :, -1, 0, 0] slice of the broadcast
+    table, bitwise — Stage-1 decisions cannot drift off the table path."""
+    from repro.core.cost_model import accuracy_stage1
+
+    z = jnp.asarray(np.random.default_rng(0).uniform(0, 1, 33), jnp.float32)
+    table_slice = np.asarray(accuracy_table(SYS, z))[:, :, -1, 0, 0]
+    pointwise = np.asarray(accuracy_stage1(SYS, z))
+    np.testing.assert_array_equal(pointwise, table_slice)
+
+
+def _enforce_bandwidth_table_golden(lat, sol, difficulty, acc_req,
+                                    total_budget=None, rounds=8):
+    """The pre-table-free C6 repair (builds the (M, N, Z, K, 2) accuracy
+    table + fancy-index gathers) — kept verbatim as the parity golden."""
+    from repro.core.robust import BIG
+
+    sys = lat.sys
+    bw_tab = lat.bw
+    f = lat.accuracy(difficulty)
+    budget = sys.total_bw_mbps if total_budget is None else total_budget
+    margin = sys.acc_margin_robust
+    m = sol["r"].shape[0]
+
+    def round_fn(state, _):
+        r, p = state
+        bw = bw_tab[r, p, sol["route"]]
+        excess = bw.sum() - budget
+        p_dn = jnp.maximum(p - 1, 0)
+        r_dn = jnp.maximum(r - 1, 0)
+        f_pdn = f[jnp.arange(m), r, p_dn, sol["v"], sol["route"]]
+        f_rdn = f[jnp.arange(m), r_dn, p, sol["v"], sol["route"]]
+        can_p = (p > 0) & (f_pdn >= acc_req + margin)
+        can_r = (r > 0) & (f_rdn >= acc_req + margin)
+        gain_p = bw - bw_tab[r, p_dn, sol["route"]]
+        gain_r = bw - bw_tab[r_dn, p, sol["route"]]
+        gain = jnp.where(can_p, gain_p, jnp.where(can_r, gain_r, -BIG))
+        order = jnp.argsort(-gain)
+        gain_sorted = gain[order]
+        cum_before = jnp.concatenate(
+            [jnp.zeros((1,), gain.dtype), jnp.cumsum(gain_sorted)[:-1]])
+        demote_sorted = (excess > 0) & (cum_before < excess) & (gain_sorted > 0)
+        demote = jnp.zeros((m,), bool).at[order].set(demote_sorted)
+        r = jnp.where(demote & ~can_p, r_dn, r)
+        p = jnp.where(demote & can_p, p_dn, p)
+        return (r, p), excess + budget
+
+    (r, p), bw_hist = jax.lax.scan(
+        round_fn, (sol["r"], sol["p"]), None, length=rounds)
+    return dict(sol, r=r, p=p), bw_hist
+
+
+def test_enforce_bandwidth_table_free_matches_table_golden():
+    """Pointwise-accuracy + hoisted-panel C6 repair == the table-building
+    golden, bit for bit (decisions AND the bandwidth history), across easy
+    and tight budgets."""
+    m = 41
+    rng = np.random.default_rng(11)
+    z = jnp.asarray(rng.uniform(0, 1, m), jnp.float32)
+    aq = jnp.asarray(rng.uniform(0.5, 0.75, m), jnp.float32)
+    sol = solve_ccg(PROB, z, aq)
+    sol = {k: sol[k] for k in ("route", "r", "p", "v")}
+    start_bw = float(np.asarray(LAT.solution_bandwidth(sol)).sum())
+    for frac in (2.0, 0.6, 0.25):   # no-op, moderate, aggressive demotion
+        budget = frac * start_bw
+        got, got_hist = enforce_bandwidth(LAT, sol, z, aq, total_budget=budget)
+        want, want_hist = _enforce_bandwidth_table_golden(
+            LAT, sol, z, aq, total_budget=budget)
+        for k in got:
+            np.testing.assert_array_equal(
+                np.asarray(got[k]), np.asarray(want[k]),
+                err_msg=f"frac={frac}:{k}")
+        np.testing.assert_array_equal(
+            np.asarray(got_hist), np.asarray(want_hist), err_msg=f"frac={frac}")
+
+
+def test_route_windowed_jit_matches_eager_golden():
+    """The jitted windowed ``route`` == the original eager composition
+    (windowed gate scan -> table-based Stage-1 -> CCG -> temporal
+    consistency -> table-based C6), decision-bitwise — with and without
+    history."""
+    from repro.core.gating import gate_scan_batch
+    from repro.core.router import apply_temporal_consistency, route
+
+    m, t = 9, 6
+    rng = np.random.default_rng(5)
+    gcfg = GateConfig(d_feature=feature_dim())
+    gparams = init_params(gate_specs(gcfg), jax.random.PRNGKey(0))
+    dx_win = jnp.asarray(rng.normal(size=(m, t, feature_dim())), jnp.float32)
+    z = jnp.asarray(rng.uniform(0, 1, m), jnp.float32)
+    aq = jnp.asarray(rng.uniform(0.5, 0.75, m), jnp.float32)
+    rcfg = RouterConfig()
+    histories = [
+        (None, None),
+        (jnp.asarray(rng.integers(0, 2, m), jnp.int32),
+         jnp.asarray(rng.uniform(0, 1, m), jnp.float32)),
+    ]
+    for prev_route, prev_tau in histories:
+        got = route(PROB, gcfg, gparams, dx_win, z, aq,
+                    prev_route=prev_route, prev_tau=prev_tau)
+
+        pr = -jnp.ones((m,), jnp.int32) if prev_route is None else prev_route
+        pt = jnp.zeros((m,)) if prev_tau is None else prev_tau
+        taus_seq, _, _ = gate_scan_batch(gcfg, gparams, dx_win)
+        taus = taus_seq[:, -1]
+        # table-based Stage-1 (the pre-change implementation)
+        f = LAT.accuracy(z)
+        f_edge_v1 = f[:, :, -1, 0, 0]
+        feasible_edge = f_edge_v1 >= aq[:, None]
+        first_ok = jnp.argmax(feasible_edge, axis=1)
+        any_ok = feasible_edge.any(axis=1)
+        warm_r = jnp.where(any_ok, first_ok, SYS.n_res - 1)
+        warm_route = jnp.where(
+            any_ok, (taus > rcfg.tau_cloud).astype(jnp.int32), 1)
+        warm_route = apply_temporal_consistency(warm_route, pr, taus, pt, rcfg)
+        warm_y = LAT.flatten_index(warm_route, warm_r, SYS.n_fps - 1)
+        sol = solve_ccg(PROB, z, aq, warm_y=warm_y.astype(jnp.int32))
+        sol = dict(sol, route=apply_temporal_consistency(
+            sol["route"], pr, taus, pt, rcfg))
+        sol, _ = _enforce_bandwidth_table_golden(
+            LAT, sol, z, aq, rounds=rcfg.repair_rounds)
+        for k in ("route", "r", "p", "v", "iters", "infeasible"):
+            np.testing.assert_array_equal(
+                np.asarray(got[k]), np.asarray(sol[k]), err_msg=k)
+        np.testing.assert_allclose(np.asarray(got["tau"]), np.asarray(taus),
+                                   atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(got["warm_route"]),
+                                      np.asarray(warm_route))
+
+
+def test_solve_ccg_finish_is_table_free_identical():
+    """The table-free epilogue (bitmask feas + fused best-acc fallback)
+    keeps v*/fallback decisions bit-identical to the while_loop oracle on a
+    batch mixing converged, warm-started, and all-infeasible lanes."""
+    from repro.core.robust import solve_ccg_while
+
+    z = jnp.asarray([0.3, 0.95, 0.6, 0.1, 0.8], jnp.float32)
+    aq = jnp.asarray([0.55, 0.99, 0.72, 0.5, 0.99], jnp.float32)  # 1, 4 inf.
+    warm_y = jnp.asarray([-1, -1, 12, 0, 3], jnp.int32)
+    sol_u = solve_ccg(PROB, z, aq, warm_y=warm_y)
+    sol_w = solve_ccg_while(PROB, z, aq, warm_y=warm_y)
+    for k in sol_u:
+        np.testing.assert_array_equal(
+            np.asarray(sol_u[k]), np.asarray(sol_w[k]), err_msg=k)
+    assert np.asarray(sol_u["infeasible"]).tolist() == [
+        False, True, False, False, True]
