@@ -13,7 +13,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.cost_model import SystemConfig, accuracy_table, cost_tables
-from repro.serving.baselines import make_method
+from repro.serving.policy import make_policy
 from repro.serving.simulator import SimConfig, Simulator
 
 METHODS = ("A2", "JCAB", "RDAP", "Sniper", "R2E-VID")
@@ -44,10 +44,12 @@ def _sim(sys, *, req="stable", fluct=0.0, n_tasks=60, seed=42, n_rounds=8, datas
 
 
 def run_method(sys, name, **kw):
+    """Drive one policy through the compiled ``ServeSession`` serve loop
+    (``Simulator.run``); ``method_kw`` forwards to ``make_policy``."""
     sim = _sim(sys, **{k: v for k, v in kw.items() if k != "method_kw"})
-    m = make_method(name, sys, **kw.get("method_kw", {}))
+    policy = make_policy(name, sys, **kw.get("method_kw", {}))
     sim.rng = np.random.default_rng(kw.get("seed", 42))
-    return sim.run(m)
+    return sim.run(policy)
 
 
 # ---------------------------------------------------------------------------

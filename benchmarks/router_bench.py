@@ -24,10 +24,17 @@ Prints ``name,us_per_call,derived`` CSV lines (the repo benchmark contract):
                            between the two on a fixed seed
   sim/realize_batch_per_round — amortized per-round cost when whole rounds
                            are realized in one vmapped batch
+  policy/{name}          — every registered policy (a2_cloud_only, jcab,
+                           rdap, sniper, r2evid) through the SAME compiled
+                           ``ServeSession.run`` scan: µs per routed+realized
+                           round at the default M, so baseline and R2E-VID
+                           numbers are apples-to-apples compiled programs
   sweep/{stage}@M{m}     — ``--streams-sweep`` rows: per-stage latency (gate,
-                           stage1, ccg, repair, and the full route_step) at
-                           each stream count M, with us_per_segment derived so
-                           batch amortization is measured, not assumed
+                           stage1, ccg, repair, realize, and the full
+                           route_step) at each stream count M, with
+                           us_per_segment derived so batch amortization —
+                           and the LPT-packing realization wall — is
+                           measured, not assumed
 
 With ``--json`` the same rows are written to ``BENCH_router.json`` so every
 PR records the perf trajectory (CI uploads it as an artifact).  With
@@ -133,12 +140,53 @@ def bench_route_step(streams: int, steps: int, window: int = 8,
     ]
 
 
+def bench_policies(streams: int, rounds: int, iters: int = 5):
+    """Every registered policy through the one compiled ``ServeSession.run``
+    scan — the apples-to-apples serving comparison the paper's claims rest
+    on (baselines get batching + donation + the fused realization exactly
+    like R2E-VID).  µs per routed+realized round."""
+    from repro.core.cost_model import SystemConfig
+    from repro.core.features import feature_dim
+    from repro.core.gating import GateConfig, gate_specs
+    from repro.models.params import init_params
+    from repro.serving.policy import POLICIES, make_policy
+    from repro.serving.session import ServeSession
+    from repro.serving.simulator import SimConfig, Simulator
+
+    sys_ = SystemConfig()
+    sim = Simulator(sys_, SimConfig(n_tasks=streams, seed=11, bw_fluctuation=0.2))
+    stream = sim.sample_stream(n_rounds=rounds, feature_seed=2)
+    rows = []
+    for name in sorted(POLICIES):
+        if name == "r2evid":
+            gcfg = GateConfig(d_feature=feature_dim())
+            gp = init_params(gate_specs(gcfg), jax.random.PRNGKey(0))
+            policy = make_policy(name, sys_, gate_cfg=gcfg, gate_params=gp)
+        else:
+            policy = make_policy(name, sys_)
+        session = ServeSession(policy, n_streams=streams, sim=sim.sim)
+
+        def run():
+            mets = session.run(stream)
+            jax.block_until_ready(mets["cost"])
+
+        us = _timeit(run, iters) / rounds
+        rows.append((f"policy/{name}", us,
+                     f"rounds={rounds},streams={streams},us_per_segment="
+                     f"{us / streams:.3f}"))
+    return rows
+
+
 def bench_streams_sweep(sweep, steps: int):
     """Stream-count scaling of the table-free hot path: per-stage µs at each
     M plus the full ``route_step``.  The per-segment µs in ``derived`` is the
     checked-in evidence that large-M batches amortize (sub-linear scaling):
     ``per_seg_vs_M{m0}`` is the ratio of this row's µs/segment to the
-    smallest-M row's — < 1.0 means batching wins."""
+    smallest-M row's — < 1.0 means batching wins.  The ``realize`` stage
+    times ``realize_rounds`` (fair-share transmission + LPT queueing +
+    pointwise accuracy) on one M-task round — the ROADMAP's suspected next
+    scaling wall is its sequential O(M) packing scan, so its per-segment
+    µs is the number to watch."""
     from repro.core.cost_model import SystemConfig
     from repro.core.features import feature_dim
     from repro.core.gating import GateConfig, gate_specs, gate_step_batch, init_batch_state
@@ -149,6 +197,7 @@ def bench_streams_sweep(sweep, steps: int):
         stage1_configure,
     )
     from repro.models.params import init_params
+    from repro.serving.simulator import realize_rounds
 
     sys_ = SystemConfig()
     prob = RobustProblem.build(sys_)
@@ -172,7 +221,10 @@ def bench_streams_sweep(sweep, steps: int):
         taus = jnp.asarray(rng.uniform(0, 1, m), jnp.float32)
         prev_r = -jnp.ones((m,), jnp.int32)
         prev_t = jnp.zeros((m,), jnp.float32)
-        iters = max(steps // 3, 3)
+        # floor of 10: the cheap stages (stage1/realize, ~100-300 µs) are
+        # dispatch-noise-dominated; the CI smoke's tiny --steps would give
+        # best-of-1-call chunks and flake the --check gate
+        iters = max(steps // 3, 10)
 
         gate_st = init_batch_state(gcfg, m)
 
@@ -195,6 +247,15 @@ def bench_streams_sweep(sweep, steps: int):
             fixed, _ = repair_j(sol_fixed, z, aq)
             jax.block_until_ready(fixed["r"])
 
+        bwm = jnp.asarray(rng.uniform(0.8, 1.0, 2), jnp.float32)
+        u_real = jnp.asarray(rng.uniform(0, 0.3, sys_.num_versions), jnp.float32)
+
+        def bench_realize_round():
+            met = realize_rounds(
+                sys_, z, bwm, u_real, sol_fixed["route"], sol_fixed["r"],
+                sol_fixed["p"], sol_fixed["v"], n_edge=4, n_cloud=1)
+            jax.block_until_ready(met["cost"])
+
         engine = RouterEngine(prob, gcfg, gparams, n_streams=m)
 
         def bench_step():
@@ -203,6 +264,7 @@ def bench_streams_sweep(sweep, steps: int):
 
         stages = [("gate", bench_gate), ("stage1", bench_stage1),
                   ("ccg", bench_ccg), ("repair", bench_repair),
+                  ("realize", bench_realize_round),
                   ("route_step", bench_step)]
         for stage, fn in stages:
             us = _timeit(fn, iters)
@@ -332,6 +394,7 @@ def main():
     rows = []
     rows += bench_route_step(args.streams, args.steps)
     rows += bench_serve_scan(args.streams, args.scan_rounds)
+    rows += bench_policies(args.streams, args.scan_rounds)
     rows += bench_realize(args.tasks)
     if args.streams_sweep:
         sweep = [int(s) for s in args.streams_sweep.split(",")]

@@ -1,7 +1,8 @@
-"""Routed serving: the stateful streaming router engine (fused batched gate
-recurrence + warm-started robust two-stage selection per segment) dispatching
-batched requests onto live edge/cloud model pools.  Each round's segments run
-under one compiled ``lax.scan`` (``RouterEngine.step_many``).
+"""Routed serving: one ``ServeSession`` owning the gate-mode r2evid policy
+(fused batched gate recurrence + warm-started robust two-stage selection per
+segment) and the live edge/cloud model pools its decisions dispatch onto.
+Each round's segments run under one compiled ``lax.scan``
+(``session.route_many``); swap ``--policy`` for any registered baseline.
 
   PYTHONPATH=src python examples/serve_routed.py
 """

@@ -194,6 +194,7 @@ def _two_stage_select(
     prev_route,           # (M,)
     prev_tau,             # (M,)
     rcfg: RouterConfig,
+    force: str = "auto",
 ):
     """Shared Stage-1 → warm-started CCG → temporal-consistency core.
 
@@ -208,7 +209,8 @@ def _two_stage_select(
     )
     # Stage-1 picks (route, r) at max fps — seed CCG with that configuration
     warm_y = lat.flatten_index(warm_route, warm_r, lat.sys.n_fps - 1)
-    sol = solve_ccg(prob, difficulty, acc_req, warm_y=warm_y.astype(jnp.int32))
+    sol = solve_ccg(prob, difficulty, acc_req, warm_y=warm_y.astype(jnp.int32),
+                    force=force)
     # Stage-1 consistency overrides Stage-2 route flips that the gate forbids
     sol = dict(sol, route=apply_temporal_consistency(
         sol["route"], prev_route, taus, prev_tau, rcfg
@@ -228,6 +230,7 @@ def route_segment(
     difficulty,           # (M,)
     acc_req,              # (M,)
     rcfg: RouterConfig = RouterConfig(),
+    force: str = "auto",
 ):
     """Per-stream portion of the streaming step: gate → Stage-1 → CCG →
     temporal consistency.  Everything here is embarrassingly parallel over
@@ -237,15 +240,17 @@ def route_segment(
     pre-repair solution (tau / warm diagnostics included).
     """
     new_gate, (taus, _gate_means) = gate_step_batch(
-        gate_cfg, gate_params, state.gate, dx
+        gate_cfg, gate_params, state.gate, dx, force=force
     )
     sol = _two_stage_select(
-        prob, taus, difficulty, acc_req, state.prev_route, state.prev_tau, rcfg
+        prob, taus, difficulty, acc_req, state.prev_route, state.prev_tau,
+        rcfg, force=force
     )
     return new_gate, taus, sol
 
 
-@partial(jax.jit, static_argnames=("gate_cfg", "rcfg"), donate_argnames=("state",))
+@partial(jax.jit, static_argnames=("gate_cfg", "rcfg", "force"),
+         donate_argnames=("state",))
 def route_step(
     prob: RobustProblem,
     gate_cfg: GateConfig,
@@ -255,6 +260,7 @@ def route_step(
     difficulty,           # (M,)
     acc_req,              # (M,)
     rcfg: RouterConfig = RouterConfig(),
+    force: str = "auto",
 ):
     """One fully jit-compiled streaming step: (state, segment batch) -> (state, sol).
 
@@ -270,7 +276,8 @@ def route_step(
     """
     lat = prob.lat
     new_gate, taus, sol = route_segment(
-        prob, gate_cfg, gate_params, state, dx, difficulty, acc_req, rcfg
+        prob, gate_cfg, gate_params, state, dx, difficulty, acc_req, rcfg,
+        force=force
     )
     sol, bw_hist = enforce_bandwidth(lat, sol, difficulty, acc_req,
                                      rounds=rcfg.repair_rounds)
@@ -315,43 +322,55 @@ def route_scan(
 
 
 class RouterEngine:
-    """Convenience wrapper threading :class:`RouterState` through ``route_step``.
+    """Deprecation shim: the streaming R2E-VID engine as a thin wrapper over
+    :class:`~repro.serving.session.ServeSession` with the gate-mode
+    ``r2evid`` policy.
 
-    Owns the compiled step and the per-stream state; ``step`` consumes one
-    (M, d) segment feature batch and returns the routing solution.  Steady
-    state does zero table rebuilding and zero window re-scans.
+    Kept with the original signature — ``step`` consumes one (M, d) segment
+    feature batch and returns the routing solution, ``step_many`` scans S
+    segments in one compiled program — and parity-locked bit-for-bit against
+    ``route_step`` / ``route_scan`` (the session's decide path lowers the
+    exact same computation).  New code should construct a
+    :class:`ServeSession` directly.
     """
 
     def __init__(self, prob: RobustProblem, gate_cfg: GateConfig, gate_params,
                  n_streams: int, rcfg: RouterConfig = RouterConfig()):
+        from repro.serving.policy import R2EVidPolicy
+        from repro.serving.session import ServeSession
+
         self.prob = prob
         self.gate_cfg = gate_cfg
         self.gate_params = gate_params
         self.rcfg = rcfg
-        self.state = init_router_state(gate_cfg, n_streams)
+        self.session = ServeSession(
+            R2EVidPolicy(prob=prob, gate_params=gate_params,
+                         gate_cfg=gate_cfg, rcfg=rcfg),
+            n_streams=n_streams,
+        )
+
+    @property
+    def state(self) -> RouterState:
+        return self.session.state
+
+    @state.setter
+    def state(self, value: RouterState):
+        self.session.state = value
 
     def step(self, dx, difficulty, acc_req):
-        self.state, sol = route_step(
-            self.prob, self.gate_cfg, self.gate_params, self.state,
-            dx, difficulty, acc_req, rcfg=self.rcfg,
-        )
-        return sol
+        from repro.serving.policy import Observation
+        return self.session.route(Observation(z=difficulty, aq=acc_req, dx=dx))
 
     def step_many(self, dx_seq, difficulty, acc_req):
-        """Consume S segments in one compiled ``lax.scan`` (``route_scan``).
+        """Consume S segments in one compiled ``lax.scan``.
 
         dx_seq: (S, M, d).  Returns the stacked solutions; the last entry is
         the current segment's solution.
         """
-        self.state, sols = route_scan(
-            self.prob, self.gate_cfg, self.gate_params, self.state,
-            dx_seq, difficulty, acc_req, rcfg=self.rcfg,
-        )
-        return sols
+        return self.session.route_many(dx_seq, difficulty, acc_req)
 
     def reset(self, n_streams: int | None = None):
-        m = n_streams if n_streams is not None else self.state.prev_route.shape[0]
-        self.state = init_router_state(self.gate_cfg, m)
+        self.session.reset(n_streams)
 
 
 # ---------------------------------------------------------------------------

@@ -3,17 +3,20 @@
   PYTHONPATH=src python -m repro.launch.serve --rounds 4 --streams 8
 
 Video streams are synthesized, motion features drive the temporal gate, and
-the *streaming* router engine (RouterState threaded through the jit-compiled
-``route_step``) assigns (route, r, p, v) per segment; token workloads
-(proportional to the chosen fidelity) are executed on real model pools.
+one :class:`~repro.serving.session.ServeSession` owns the whole serving
+stack: the gate-mode ``r2evid`` policy (RouterState carry threaded through
+the compiled, donated decide scan), the config bundle, and the live tier
+pools the routed token workloads dispatch onto (``session.dispatch``).
 
 Each round consumes ``--segments-per-round`` segments per stream in ONE
-compiled ``lax.scan`` (``RouterEngine.step_many``): the gate recurrence
-carries across segments and rounds (no window re-scan, no per-segment Python
+compiled ``lax.scan`` (``session.route_many``): the gate recurrence carries
+across segments and rounds (no window re-scan, no per-segment Python
 dispatch, carry buffers donated — never copied), and the last segment's
-solution drives the round's dispatch.  ``--gate-resync`` sets the cadence at
-which the batched gate recomputes its running volatility sums from the exact
-ring buffer (0 = once per window; 1 = every step, drift-free).
+solution drives the round's dispatch.  ``--policy`` swaps in any registered
+policy (baselines route the same loop; they simply ignore the features).
+``--gate-resync`` sets the cadence at which the batched gate recomputes its
+running volatility sums from the exact ring buffer (0 = once per window;
+1 = every step, drift-free).
 """
 from __future__ import annotations
 
@@ -28,11 +31,11 @@ from repro.configs import get_smoke_config
 from repro.core.cost_model import SystemConfig
 from repro.core.features import feature_dim, segment_features
 from repro.core.gating import GateConfig, gate_specs
-from repro.core.robust import RobustProblem
-from repro.core.router import RouterEngine
 from repro.data.video import VideoConfig, generate_stream, make_task_batch
 from repro.models.params import init_params
+from repro.serving.policy import make_policy
 from repro.serving.pools import make_tier_pools
+from repro.serving.session import ServeSession
 
 
 def main():
@@ -42,15 +45,25 @@ def main():
     ap.add_argument("--segments-per-round", type=int, default=8)
     ap.add_argument("--edge-arch", default="qwen1.5-0.5b")
     ap.add_argument("--cloud-arch", default="qwen3-8b")
+    ap.add_argument("--policy", default="r2evid",
+                    help="registered policy name (r2evid, a2_cloud_only, "
+                         "jcab, rdap, sniper)")
     ap.add_argument("--gate-resync", type=int, default=0,
                     help="volatility resync cadence in steps (0 = per window)")
     args = ap.parse_args()
 
     sys_ = SystemConfig()
-    prob = RobustProblem.build(sys_)
-    gcfg = GateConfig(d_feature=feature_dim(), resync_period=args.gate_resync)
-    gparams = init_params(gate_specs(gcfg), jax.random.PRNGKey(0))
-    pools = make_tier_pools(get_smoke_config(args.edge_arch), get_smoke_config(args.cloud_arch))
+    if args.policy == "r2evid":
+        gcfg = GateConfig(d_feature=feature_dim(), resync_period=args.gate_resync)
+        gparams = init_params(gate_specs(gcfg), jax.random.PRNGKey(0))
+        policy = make_policy("r2evid", sys_, gate_cfg=gcfg, gate_params=gparams)
+    else:
+        policy = make_policy(args.policy, sys_)
+    session = ServeSession(
+        policy, n_streams=args.streams,
+        pools=make_tier_pools(get_smoke_config(args.edge_arch),
+                              get_smoke_config(args.cloud_arch)),
+    )
 
     spr = args.segments_per_round
     vcfg = VideoConfig()
@@ -63,33 +76,26 @@ def main():
         for fr, _ in streams
     ])
 
-    engine = RouterEngine(prob, gcfg, gparams, n_streams=args.streams)
-
     for rnd in range(args.rounds):
         z = jnp.asarray([m[rnd * spr:(rnd + 1) * spr].mean() for _, m in streams])
         t_route = time.perf_counter()
-        # stream this round's segments through the engine in one lax.scan
+        # stream this round's segments through the session in one lax.scan
         dx_seq = jnp.swapaxes(dx_all[:, rnd * spr:(rnd + 1) * spr], 0, 1)
-        sols = engine.step_many(dx_seq, z, aq)
+        sols = session.route_many(dx_seq, z, aq)
         sol = jax.tree_util.tree_map(lambda x: x[-1], sols)
         jax.block_until_ready(sol["route"])
         route_ms = (time.perf_counter() - t_route) * 1e3
 
         t0 = time.perf_counter()
-        for tier in (0, 1):
-            idx = np.where(np.asarray(sol["route"]) == tier)[0]
-            if len(idx) == 0:
-                continue
-            # token budget scales with chosen fidelity (resolution x fps)
-            n_tok = 16 * (1 + int(np.asarray(sol["r"])[idx].mean()))
-            toks = jnp.ones((len(idx), n_tok), jnp.int32)
-            pools[tier].serve_segment(toks)
+        session.dispatch(sol)
         dt = time.perf_counter() - t0
+        taus = sol.get("tau")
         print(f"round {rnd}: routes={np.asarray(sol['route']).tolist()} "
-              f"taus={np.round(np.asarray(sol['tau']), 2).tolist()} "
-              f"route={route_ms:.0f}ms serve={dt*1e3:.0f}ms")
+              + (f"taus={np.round(np.asarray(taus), 2).tolist()} "
+                 if taus is not None else "")
+              + f"route={route_ms:.0f}ms serve={dt*1e3:.0f}ms")
 
-    for tier, pool in pools.items():
+    for tier, pool in session.pools.items():
         s = pool.stats
         tps = s.tokens / max(s.busy_s, 1e-9)
         print(f"pool[{pool.name}]: requests={s.requests} tokens={s.tokens} "

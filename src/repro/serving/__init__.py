@@ -1,3 +1,10 @@
 from repro.serving.simulator import SimConfig, Simulator, realize_rounds  # noqa: F401
 from repro.serving.baselines import BASELINES, make_method  # noqa: F401
+from repro.serving.policy import (  # noqa: F401
+    Observation,
+    POLICIES,
+    Policy,
+    make_policy,
+)
+from repro.serving.session import FinetuneConfig, ServeSession  # noqa: F401
 from repro.serving.scan import run_scan, serve_scan  # noqa: F401

@@ -1,4 +1,12 @@
-"""Baseline methods (paper §4.1.1) + the R2E-VID method adapter.
+"""Baseline methods (paper §4.1.1) + the R2E-VID method adapter — retained
+as the PARITY ORACLES for the compiled policies.
+
+Since PR 5 the serving loop drives :mod:`repro.serving.policy` — pure jnp
+``Policy.decide`` steps under the compiled ``ServeSession`` scan — and
+``Simulator.run`` no longer accepts these host closures.  Each closure here
+is kept verbatim as the decision-for-decision oracle its policy port is
+tested against (tests/test_policy.py), exactly like ``solve_ccg_while``
+oracles the unrolled CCG.
 
   A²     [Jiang+ RTSS'21] — cloud-only joint model-and-data adaptation:
          minimizes nominal cost over (r, p, v) with y ≡ cloud.
@@ -189,4 +197,10 @@ BASELINES = {
 
 
 def make_method(name: str, sys: SystemConfig, **kw):
-    return BASELINES[name](sys, **kw)
+    # registry-name spellings (repro.serving.policy.POLICIES) resolve too,
+    # so parity tests can address oracle and policy by one name; the map is
+    # derived from the policy registry's aliases — one source of truth
+    from repro.serving.policy import _ALIASES
+
+    display = {registry: disp for disp, registry in _ALIASES.items()}
+    return BASELINES[display.get(name, name)](sys, **kw)

@@ -1,49 +1,29 @@
-"""Whole-run serving engine: gate → Stage-1 → CCG → C6 → realization under
-one ``lax.scan`` — optionally shard_mapped over the stream axis.
+"""Deprecation shims: the pre-PR-5 whole-run serving entry points, rebuilt on
+:class:`~repro.serving.session.ServeSession`.
 
-``run_batch`` still drives rounds from a Python loop because methods are
-stateful host callables.  The R2E-VID engine, however, is a pure jit-compiled
-step (``route_step``), and the deterministic realization path is pure jnp
-(``realize_rounds``) — so the *entire* multi-round serving run compiles to a
-single program: ``RouterState`` is the carry, each scan step routes one
-segment batch and realizes its round, and the host touches the run exactly
-twice (feed inputs, read stacked metrics).
+``serve_scan`` / ``run_scan`` keep their original signatures and outputs —
+the session's compiled scan lowers the exact same gate → Stage-1 → CCG → C6
+→ realization round body, so decisions and metrics stay bit-identical to the
+pre-refactor drivers (parity-locked against fixed-seed goldens in
+tests/test_session.py).  New code should construct the policy + session
+directly:
 
-``serve_scan`` is the compiled driver.  With a ``mesh`` it becomes ONE
-compiled *sharded* scan: the per-stream work (batched gate, Stage-1, the
-unrolled CCG, temporal consistency) runs on each device's local stream shard,
-then the decisions are all-gathered so the cross-task tail of the round (C6
-bandwidth repair, LPT realization) is computed on the exact real-M batch —
-replicated arithmetic, so multi-device metrics are identical to the
-single-device path, and M pads to any device count.  ``run_scan`` is the host
-wrapper that samples rounds from a :class:`Simulator`, applies observation
-noise exactly like ``run_batch`` does, and aggregates the same scalar
-metrics — metric parity between the paths is covered by
-tests/test_engine_scan.py.
+    policy = make_policy("r2evid", sys, gate_cfg=gcfg, gate_params=gp)
+    session = ServeSession(policy, n_streams=M)
+    mets = session.run(stream)          # stream: round-stacked Observation
+
+which also serves every baseline through the same compiled driver.
 """
 from __future__ import annotations
 
-from functools import partial
-
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.features import feature_dim
 from repro.core.gating import GateConfig
 from repro.core.robust import RobustProblem
-from repro.core.router import (
-    RouterConfig,
-    RouterState,
-    enforce_bandwidth,
-    init_router_state,
-    route_segment,
-    route_step,
-)
-from repro.serving.simulator import Simulator, realize_rounds
-
-_MET_KEYS = ("delay", "energy", "cost", "accuracy")
-_SOL_KEYS = ("route", "r", "p", "v", "tau")
+from repro.core.router import RouterConfig, RouterState
+from repro.serving.policy import Observation, R2EVidPolicy
+from repro.serving.session import ServeSession
+from repro.serving.simulator import Simulator
 
 
 def serve_scan(
@@ -62,131 +42,23 @@ def serve_scan(
     mesh=None,
     mesh_axis: str = "data",
 ):
-    """Route and realize R rounds in one ``lax.scan``.
+    """Route and realize R rounds in one ``lax.scan`` (deprecation shim).
 
-    Returns ``(final_state, mets)`` where ``mets`` holds (R, M) arrays:
-    deterministic delay / energy / cost / accuracy plus the decisions
-    (route, r, p, v) and the gate scores tau.  Observation noise is the
-    caller's job (it needs host rng state), matching ``realize_batch``.
-
-    ``mesh``: optional — when given, the whole round body is shard_mapped
-    over ``mesh_axis`` (the stream/task axis M, padded to any device count)
-    and the run compiles to a single sharded program; metrics and the final
-    state are identical to the unsharded path.  Without a mesh, ``state`` is
-    donated (the carry is threaded, not copied).
+    Returns ``(final_state, mets)`` exactly like the pre-PR-5 driver:
+    ``mets`` holds (R, M) deterministic delay / energy / cost / accuracy
+    plus the decisions (route, r, p, v) and gate scores tau; observation
+    noise stays the caller's job.  ``state`` is donated on the dense path;
+    with a ``mesh`` the whole round body is shard_mapped over the stream
+    axis (padded to any device count) with identical metrics.
     """
-    if mesh is None:
-        return _serve_scan_dense(
-            prob, gate_cfg, gate_params, state, dx_seq, z_seq, aq_seq,
-            bw_mult_seq, u_seq, rcfg=rcfg, n_edge=n_edge, n_cloud=n_cloud)
-    return _serve_scan_sharded(
-        prob, gate_cfg, gate_params, state, dx_seq, z_seq, aq_seq,
-        bw_mult_seq, u_seq, rcfg=rcfg, n_edge=n_edge, n_cloud=n_cloud,
-        mesh=mesh, mesh_axis=mesh_axis)
-
-
-@partial(jax.jit, static_argnames=("gate_cfg", "rcfg", "n_edge", "n_cloud"),
-         donate_argnames=("state",))
-def _serve_scan_dense(
-    prob, gate_cfg, gate_params, state, dx_seq, z_seq, aq_seq,
-    bw_mult_seq, u_seq, rcfg: RouterConfig, n_edge: int, n_cloud: int,
-):
-    sys = prob.lat.sys
-
-    def body(st, xs):
-        dx, z, aq, bwm, u = xs
-        st, sol = route_step(prob, gate_cfg, gate_params, st, dx, z, aq, rcfg=rcfg)
-        met = realize_rounds(
-            sys, z, bwm, u, sol["route"], sol["r"], sol["p"], sol["v"],
-            n_edge=n_edge, n_cloud=n_cloud,
-        )
-        out = {k: met[k] for k in _MET_KEYS}
-        out.update({k: sol[k] for k in _SOL_KEYS})
-        return st, out
-
-    return jax.lax.scan(
-        body, state, (dx_seq, z_seq, aq_seq, bw_mult_seq, u_seq)
-    )
-
-
-@partial(jax.jit, static_argnames=("gate_cfg", "rcfg", "n_edge", "n_cloud",
-                                   "mesh", "mesh_axis"))
-def _serve_scan_sharded(
-    prob, gate_cfg, gate_params, state, dx_seq, z_seq, aq_seq,
-    bw_mult_seq, u_seq, rcfg: RouterConfig, n_edge: int, n_cloud: int,
-    mesh, mesh_axis: str,
-):
-    """One compiled sharded scan over the whole run.
-
-    Per-stream stages run on each device's local shard of M; the cheap
-    cross-task tail (C6 repair + realization, O(M log M)) runs on the
-    all-gathered real-M batch — replicated, hence bit-comparable to the
-    dense path — and the repaired routes are sliced back into the local
-    carry.  The stream axis is padded to a multiple of the device count
-    with dummy streams (no history, zero features) that are dropped from
-    every gathered computation, so any M works on any mesh.
-    """
-    from jax.sharding import PartitionSpec as P
-
-    from repro.sharding.compat import pad_leading, shard_map
-
-    sys = prob.lat.sys          # static config — safe to close over
-    m = dx_seq.shape[1]
-    n_dev = mesh.shape[mesh_axis]
-    pad = (-m) % n_dev
-    local_m = (m + pad) // n_dev
-
-    pad_streams = lambda x: jnp.moveaxis(
-        pad_leading(jnp.moveaxis(x, 1, 0), pad), 0, 1)
-    dx_seq, z_seq, aq_seq = map(pad_streams, (dx_seq, z_seq, aq_seq))
-    state = RouterState(
-        prev_route=pad_leading(state.prev_route, pad, value=-1),
-        prev_tau=pad_leading(state.prev_tau, pad),
-        gate=jax.tree_util.tree_map(lambda x: pad_leading(x, pad), state.gate),
-    )
-
-    def shard_body(pb, gp, st_l, dx_l, z_l, aq_l, bwm_seq, u_seq_):
-        lat = pb.lat
-
-        def body(st, xs):
-            dx, z, aq, bwm, u = xs
-            new_gate, taus, sol = route_segment(
-                pb, gate_cfg, gp, st, dx, z, aq, rcfg)
-            # cross-task tail on the gathered REAL batch (padding dropped):
-            # identical arithmetic to the dense path on every device
-            gather = lambda x: jax.lax.all_gather(
-                x, mesh_axis, axis=0, tiled=True)[:m]
-            z_g, aq_g = gather(z), gather(aq)
-            sol_g = {k: gather(v) for k, v in sol.items()}
-            sol_g, _ = enforce_bandwidth(lat, sol_g, z_g, aq_g,
-                                         rounds=rcfg.repair_rounds)
-            met = realize_rounds(
-                sys, z_g, bwm, u, sol_g["route"], sol_g["r"], sol_g["p"],
-                sol_g["v"], n_edge=n_edge, n_cloud=n_cloud,
-            )
-            out = {k: met[k] for k in _MET_KEYS}
-            out.update({k: sol_g[k] for k in _SOL_KEYS})
-            # slice this device's shard of the repaired routes back into the
-            # carry (dummy streams keep the no-history marker)
-            route_pad = pad_leading(sol_g["route"].astype(jnp.int32), pad, value=-1)
-            start = jax.lax.axis_index(mesh_axis) * local_m
-            st = RouterState(
-                prev_route=jax.lax.dynamic_slice_in_dim(route_pad, start, local_m),
-                prev_tau=taus.astype(jnp.float32),
-                gate=new_gate,
-            )
-            return st, out
-
-        return jax.lax.scan(body, st_l, (dx_l, z_l, aq_l, bwm_seq, u_seq_))
-
-    final_state, mets = shard_map(
-        shard_body, mesh=mesh,
-        in_specs=(P(), P(), P(mesh_axis), P(None, mesh_axis),
-                  P(None, mesh_axis), P(None, mesh_axis), P(), P()),
-        out_specs=(P(mesh_axis), P()), check_vma=False,
-    )(prob, gate_params, state, dx_seq, z_seq, aq_seq, bw_mult_seq, u_seq)
-    final_state = jax.tree_util.tree_map(lambda x: x[:m], final_state)
-    return final_state, mets
+    policy = R2EVidPolicy(prob=prob, gate_params=gate_params,
+                          gate_cfg=gate_cfg, rcfg=rcfg)
+    session = ServeSession(policy, n_streams=dx_seq.shape[1],
+                           n_edge=n_edge, n_cloud=n_cloud, state=state)
+    stream = Observation(z=z_seq, aq=aq_seq, dx=dx_seq,
+                         bw_mult=bw_mult_seq, u=u_seq)
+    mets = session.run(stream, mesh=mesh, mesh_axis=mesh_axis)
+    return session.state, mets
 
 
 def run_scan(
@@ -199,40 +71,17 @@ def run_scan(
     feature_seed: int = 0,
     mesh=None,
 ):
-    """Host wrapper: sample rounds, run ``serve_scan``, aggregate metrics.
+    """Host wrapper (deprecation shim): sample rounds, run the compiled
+    session, aggregate the same scalar metric dict as ``Simulator.run``.
 
-    Mirrors ``Simulator.run_batch`` driven by a :class:`RouterEngine` method:
-    rounds are sampled first (same rng order), the compiled scan routes and
-    realizes them, then observation noise is drawn in one shot exactly like
-    ``realize_batch``.  Returns the same scalar metric dict as ``run_batch``.
-    ``mesh`` forwards to ``serve_scan`` (sharded whole-run scan).
+    Round sampling, feature synthesis, and the one-shot observation-noise
+    draw keep the pre-PR-5 rng order, so outputs are unchanged.
     """
-    n = n_rounds or sim.sim.n_rounds
-    m = sim.sim.n_tasks
-    rnds = [sim.sample_round() for _ in range(n)]
-    if dx_seq is None:
-        frng = np.random.default_rng(feature_seed)
-        dx_seq = jnp.asarray(
-            frng.normal(size=(n, m, feature_dim())), jnp.float32)
-
-    prob = RobustProblem.build(sim.sys)
-    state = init_router_state(gate_cfg, m)
-    _, mets = serve_scan(
-        prob, gate_cfg, gate_params, state,
-        dx_seq,
-        jnp.asarray(np.stack([rd["z"] for rd in rnds]), jnp.float32),
-        jnp.asarray(np.stack([rd["aq"] for rd in rnds]), jnp.float32),
-        jnp.asarray(np.stack([rd["bw_mult"] for rd in rnds]), jnp.float32),
-        jnp.asarray(np.stack([rd["u"] for rd in rnds]), jnp.float32),
-        rcfg=rcfg,
-        n_edge=sim.sim.n_edge_servers, n_cloud=sim.sim.n_cloud_servers,
-        mesh=mesh,
-    )
-    aq = np.stack([rd["aq"] for rd in rnds])
-    acc, success = sim.observe(np.asarray(mets["accuracy"]), aq)
-    out = {k: float(np.asarray(mets[k]).mean(axis=1).mean())
-           for k in ("delay", "energy", "cost")}
-    out["accuracy"] = float(acc.mean(axis=1).mean())
-    out["success"] = float(success.mean(axis=1).mean())
-    out["cloud_frac"] = float(np.asarray(mets["route"]).mean(axis=1).mean())
-    return out
+    stream = sim.sample_stream(n_rounds, dx_seq, feature_seed)
+    policy = R2EVidPolicy(prob=RobustProblem.build(sim.sys),
+                          gate_params=gate_params, gate_cfg=gate_cfg,
+                          rcfg=rcfg)
+    session = ServeSession(policy, n_streams=sim.sim.n_tasks, sim=sim.sim,
+                           mesh=mesh)
+    mets = session.run(stream)
+    return sim.aggregate(mets, np.asarray(stream.aq))

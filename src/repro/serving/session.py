@@ -1,0 +1,440 @@
+"""ServeSession: one compiled, shardable serve driver for every policy.
+
+The session is the single owner of the serving configuration bundle — the
+:class:`SystemConfig` / :class:`GateConfig` / :class:`RouterConfig` arrive
+inside the :class:`~repro.serving.policy.Policy`, the :class:`SimConfig`
+(server pool sizes) and the mesh + stream padding live here — plus the kernel
+``force=`` pins and the carry donation discipline.  Every registered policy
+(R2E-VID and all four baselines) runs through the same three entry points:
+
+  ``session.step(obs)``          one round (decide, and realize when the
+                                 observation carries ``bw_mult``/``u``)
+  ``session.run(stream)``        R rounds under ONE ``lax.scan`` with the
+                                 realization fused into the scan body;
+                                 per-round (R, M) metrics out
+  ``session.run_sharded(mesh, stream)``
+                                 the same run as ONE compiled *sharded*
+                                 scan: the policy's per-stream stage runs on
+                                 each device's local stream shard, the
+                                 cross-task tail (``Policy.repair`` + LPT
+                                 realization) on the all-gathered real-M
+                                 batch — metrics identical to the dense path
+
+``session.route(obs)`` / ``session.route_many(...)`` are the decide-only
+fast paths backing the :class:`RouterEngine` deprecation shim.  The carry is
+donated in every compiled driver (buffers reused, never copied per step) and
+threaded through ``self.state``, so callers never handle donation manually.
+
+Optional online gate fine-tuning (``finetune=FinetuneConfig``): the scan
+carry additionally threads the gate parameters, and every ``resync_period``
+rounds a realized-success gradient step (BCE of the gate scores τ against
+the round's SLA misses, proximally anchored at the offline parameters —
+paper §3.2's online adaptation driven by what actually happened) updates
+them inside the compiled run.  ``finetune=None`` (the default) lowers the
+exact same program as before — bit-identical, covered by
+tests/test_session.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gating import gate_step_batch
+from repro.serving.policy import Observation, Policy
+from repro.serving.simulator import SimConfig, realize_rounds
+
+_MET_KEYS = ("delay", "energy", "cost", "accuracy")
+_SOL_KEYS = ("route", "r", "p", "v", "tau")
+
+
+@dataclasses.dataclass(frozen=True)
+class FinetuneConfig:
+    """Online gate fine-tuning knobs (off unless passed to the session)."""
+    lr: float = 1e-3
+    resync_period: int = 4     # apply one gradient step every this many rounds
+    mu: float = 0.1            # proximal anchor weight (catastrophic-forgetting guard)
+
+
+def _round_output(sol, met):
+    """The per-round scan output: deterministic metrics + the decisions."""
+    out = {k: met[k] for k in _MET_KEYS}
+    out.update({k: sol[k] for k in _SOL_KEYS if k in sol})
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Compiled drivers (module-level so the jit cache is shared across sessions;
+# the policy's static metadata is part of the compilation key via its pytree
+# treedef, its tables are traced operands)
+# ---------------------------------------------------------------------------
+@partial(jax.jit, donate_argnames=("state",))
+def _decide_step(policy, state, obs):
+    return policy.decide(state, obs)
+
+
+@partial(jax.jit, donate_argnames=("state",))
+def _decide_scan(policy, state, obs_seq):
+    def body(st, obs):
+        return policy.decide(st, obs)
+
+    return jax.lax.scan(body, state, obs_seq)
+
+
+@partial(jax.jit, static_argnames=("n_edge", "n_cloud"),
+         donate_argnames=("state",))
+def _serve_step(policy, state, obs, n_edge, n_cloud):
+    sys = policy.lat.sys
+    state, sol = policy.decide(state, obs)
+    met = realize_rounds(
+        sys, obs.z, obs.bw_mult, obs.u, sol["route"], sol["r"], sol["p"],
+        sol["v"], n_edge=n_edge, n_cloud=n_cloud,
+    )
+    return state, _round_output(sol, met)
+
+
+@partial(jax.jit, static_argnames=("n_edge", "n_cloud"),
+         donate_argnames=("state",))
+def _serve_run(policy, state, obs_seq, n_edge, n_cloud):
+    sys = policy.lat.sys
+
+    def body(st, obs):
+        st, sol = policy.decide(st, obs)
+        met = realize_rounds(
+            sys, obs.z, obs.bw_mult, obs.u, sol["route"], sol["r"], sol["p"],
+            sol["v"], n_edge=n_edge, n_cloud=n_cloud,
+        )
+        return st, _round_output(sol, met)
+
+    return jax.lax.scan(body, state, obs_seq)
+
+
+@partial(jax.jit, static_argnames=("ft", "n_edge", "n_cloud"),
+         donate_argnames=("carry",))
+def _serve_run_finetune(policy, carry, obs_seq, anchor, ft, n_edge, n_cloud):
+    """``_serve_run`` with the gate parameters threaded through the carry.
+
+    carry = (policy state, gate params, round index).  Every
+    ``ft.resync_period`` rounds one SGD step minimizes the realized-success
+    BCE: τ should open (offload) exactly where this round's deterministic
+    accuracy missed the requirement.  The gradient is truncated to the
+    current round's gate cell (the carried recurrence is stop-gradiented),
+    and a proximal term μ/2·‖θ − θ_offline‖² anchors against forgetting.
+    """
+    sys = policy.lat.sys
+    gcfg = policy.gate_cfg
+
+    def body(c, obs):
+        st, params, i = c
+        pol = dataclasses.replace(policy, gate_params=params)
+        new_st, sol = pol.decide(st, obs)
+        met = realize_rounds(
+            sys, obs.z, obs.bw_mult, obs.u, sol["route"], sol["r"], sol["p"],
+            sol["v"], n_edge=n_edge, n_cloud=n_cloud,
+        )
+        fail = (met["accuracy"] < obs.aq).astype(jnp.float32)   # SLA misses
+
+        def loss_fn(p):
+            frozen = jax.tree_util.tree_map(jax.lax.stop_gradient, st.gate)
+            # force="ref": the jnp cell is the differentiable twin of the
+            # Pallas gate_cell (value parity is kernel-tested); the kernel
+            # has no VJP, so auto-dispatch would fail under grad on TPU
+            _, (taus, _) = gate_step_batch(gcfg, p, frozen, obs.dx,
+                                           force="ref")
+            eps = 1e-6
+            bce = -(fail * jnp.log(taus + eps)
+                    + (1.0 - fail) * jnp.log(1.0 - taus + eps)).mean()
+            prox = sum(
+                jnp.sum(jnp.square(a - b))
+                for a, b in zip(jax.tree_util.tree_leaves(p),
+                                jax.tree_util.tree_leaves(anchor))
+            )
+            return bce + 0.5 * ft.mu * prox
+
+        params = jax.lax.cond(
+            (i + 1) % ft.resync_period == 0,
+            lambda p: jax.tree_util.tree_map(
+                lambda a, g: a - ft.lr * g, p, jax.grad(loss_fn)(p)),
+            lambda p: p,
+            params,
+        )
+        return (new_st, params, i + 1), _round_output(sol, met)
+
+    return jax.lax.scan(body, carry, obs_seq)
+
+
+@partial(jax.jit, static_argnames=("n_edge", "n_cloud", "mesh", "mesh_axis",
+                                   "has_dx"))
+def _serve_run_sharded(policy, state, obs_seq, n_edge, n_cloud, mesh,
+                       mesh_axis, has_dx):
+    """One compiled sharded scan over the whole run, for ANY shardable policy.
+
+    The policy's per-stream stage (``decide_stream``) runs on each device's
+    local shard of the stream axis M (padded to a multiple of the device
+    count with dummy streams that the policy's ``pad_state`` marks inert);
+    the decisions are then all-gathered so the cross-task tail
+    (``Policy.repair``, LPT realization) is computed on the exact real-M
+    batch — replicated arithmetic, hence metrics identical to the dense
+    path.  The carry stays local: ``repair`` is contractually forbidden from
+    changing anything the per-stream state depends on (C6 demotes fidelity,
+    never flips routes), so the locally-built state is already exact.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.sharding.compat import pad_leading, shard_map
+
+    m = obs_seq.z.shape[1]
+    n_dev = mesh.shape[mesh_axis]
+    pad = (-m) % n_dev
+
+    pad_streams = lambda x: jnp.moveaxis(
+        pad_leading(jnp.moveaxis(x, 1, 0), pad), 0, 1)
+    obs_seq = Observation(
+        z=pad_streams(obs_seq.z),
+        aq=pad_streams(obs_seq.aq),
+        dx=pad_streams(obs_seq.dx) if has_dx else None,
+        bw_mult=obs_seq.bw_mult,
+        u=obs_seq.u,
+    )
+    state = policy.pad_state(state, pad)
+
+    def shard_body(pol, st_l, dx_l, z_l, aq_l, bwm_seq, u_seq):
+        def body(st, xs):
+            dx, z, aq, bwm, u = xs
+            obs_l = Observation(z=z, aq=aq, dx=dx)
+            st, sol = pol.decide_stream(st, obs_l)
+            # cross-task tail on the gathered REAL batch (padding dropped):
+            # identical arithmetic to the dense path on every device
+            gather = lambda x: jax.lax.all_gather(
+                x, mesh_axis, axis=0, tiled=True)[:m]
+            z_g, aq_g = gather(z), gather(aq)
+            sol_g = {k: gather(v) for k, v in sol.items()}
+            sol_g = pol.repair(sol_g, z_g, aq_g)
+            met = realize_rounds(
+                pol.lat.sys, z_g, bwm, u, sol_g["route"], sol_g["r"],
+                sol_g["p"], sol_g["v"], n_edge=n_edge, n_cloud=n_cloud,
+            )
+            return st, _round_output(sol_g, met)
+
+        return jax.lax.scan(body, st_l, (dx_l, z_l, aq_l, bwm_seq, u_seq))
+
+    dx_spec = P(None, mesh_axis) if has_dx else P()
+    final_state, mets = shard_map(
+        shard_body, mesh=mesh,
+        in_specs=(P(), P(mesh_axis), dx_spec, P(None, mesh_axis),
+                  P(None, mesh_axis), P(), P()),
+        out_specs=(P(mesh_axis), P()), check_vma=False,
+    )(policy, state, obs_seq.dx, obs_seq.z, obs_seq.aq, obs_seq.bw_mult,
+      obs_seq.u)
+    final_state = jax.tree_util.tree_map(lambda x: x[:m], final_state)
+    return final_state, mets
+
+
+# ---------------------------------------------------------------------------
+# The session
+# ---------------------------------------------------------------------------
+class ServeSession:
+    """Stateful owner of one policy's serving run.
+
+    Parameters
+    ----------
+    policy : Policy
+        Any registered policy (``make_policy``).  Carries the
+        SystemConfig / GateConfig / RouterConfig bundle and the kernel
+        ``force=`` preference; pass ``force=`` here to override the pin for
+        the whole session.
+    n_streams : int
+        The stream/task batch size M the carry is sized for.
+    sim : SimConfig, optional
+        Realization-side configuration (server pool sizes).  ``n_edge`` /
+        ``n_cloud`` override its fields.
+    mesh, mesh_axis : optional
+        Default mesh for ``run`` (``run_sharded`` takes an explicit one).
+    finetune : FinetuneConfig, optional
+        Enable the online gate fine-tuning carry (gate-mode r2evid only).
+    pools : dict, optional
+        Tier -> :class:`~repro.serving.pools.ModelPool` live endpoints;
+        ``dispatch`` maps a routed solution's token workloads onto them.
+    """
+
+    def __init__(self, policy: Policy, n_streams: int, *,
+                 sim: SimConfig | None = None,
+                 n_edge: int | None = None, n_cloud: int | None = None,
+                 mesh=None, mesh_axis: str = "data",
+                 finetune: FinetuneConfig | None = None,
+                 force: str | None = None, pools=None, state=None):
+        if force is not None and hasattr(policy, "force"):
+            policy = dataclasses.replace(policy, force=force)
+        sim = sim or SimConfig()
+        self.policy = policy
+        self.n_streams = n_streams
+        self.sim_cfg = sim
+        self.n_edge = sim.n_edge_servers if n_edge is None else n_edge
+        self.n_cloud = sim.n_cloud_servers if n_cloud is None else n_cloud
+        self.mesh = mesh
+        self.mesh_axis = mesh_axis
+        self.pools = pools
+        self.finetune = finetune
+        self.state = policy.init(n_streams) if state is None else state
+        self._rounds_done = jnp.zeros((), jnp.int32)
+        if finetune is not None:
+            if getattr(policy, "gate_params", None) is None:
+                raise ValueError(
+                    "finetune requires a gate-mode r2evid policy "
+                    "(gate_params must be set)")
+            # the proximal anchor: the offline parameters at session start
+            self._anchor = jax.tree_util.tree_map(jnp.copy, policy.gate_params)
+            # the finetune carry is donated every run — the session must own
+            # its parameter buffers, not alias the caller's policy
+            self.policy = dataclasses.replace(
+                policy,
+                gate_params=jax.tree_util.tree_map(jnp.copy, policy.gate_params))
+
+    # -- config bundle accessors -------------------------------------------
+    @property
+    def sys_cfg(self):
+        return self.policy.lat.sys
+
+    @property
+    def gate_params(self):
+        return getattr(self.policy, "gate_params", None)
+
+    # ----------------------------------------------------------------------
+    def reset(self, n_streams: int | None = None):
+        if n_streams is not None:
+            self.n_streams = n_streams
+        self.state = self.policy.init(self.n_streams)
+        self._rounds_done = jnp.zeros((), jnp.int32)
+
+    def _check_obs(self, obs: Observation, rounds: bool):
+        want = (2, 3) if rounds else (1, 2)
+        if obs.z.ndim not in want:
+            raise ValueError(f"Observation.z has rank {obs.z.ndim}; "
+                             f"expected a {'round-stacked ' if rounds else ''}"
+                             f"stream batch")
+        if obs.z.shape[-1] != self.n_streams:
+            raise ValueError(
+                f"Observation carries {obs.z.shape[-1]} streams but the "
+                f"session was sized for {self.n_streams}")
+
+    # -- decide-only fast paths (RouterEngine / launch loop) ---------------
+    def route(self, obs: Observation):
+        """Route one segment batch (no realization).  Returns the solution."""
+        self.state, sol = _decide_step(self.policy, self.state, obs)
+        return sol
+
+    def route_many(self, dx_seq, difficulty, acc_req):
+        """Route S segment batches in one compiled ``lax.scan``.
+
+        dx_seq: (S, M, d) (or None for gate-free policies); difficulty /
+        acc_req: (M,) or (S, M).  Returns the stacked solutions.
+        """
+        if dx_seq is not None:
+            s = dx_seq.shape[0]
+        elif difficulty.ndim > 1:
+            s = difficulty.shape[0]
+        else:
+            raise ValueError(
+                "route_many cannot infer the segment count: pass dx_seq or "
+                "round-stacked (S, M) difficulty/acc_req")
+        if difficulty.ndim == 1:
+            difficulty = jnp.broadcast_to(difficulty, (s,) + difficulty.shape)
+        if acc_req.ndim == 1:
+            acc_req = jnp.broadcast_to(acc_req, (s,) + acc_req.shape)
+        obs_seq = Observation(z=difficulty, aq=acc_req, dx=dx_seq)
+        self.state, sols = _decide_scan(self.policy, self.state, obs_seq)
+        return sols
+
+    # -- serve (decide + realize) ------------------------------------------
+    def step(self, obs: Observation):
+        """One serving round.  With ``bw_mult``/``u`` on the observation the
+        round is realized and (sol+metrics) returned; without them this is
+        ``route``."""
+        self._check_obs(obs, rounds=False)
+        if obs.u is None or obs.bw_mult is None:
+            return self.route(obs)
+        self.state, out = _serve_step(
+            self.policy, self.state, obs, self.n_edge, self.n_cloud)
+        return out
+
+    def run(self, stream: Observation, n_rounds: int | None = None,
+            mesh=None, mesh_axis: str | None = None):
+        """Serve R rounds in one compiled scan (realization fused).
+
+        ``stream``: an :class:`Observation` whose fields carry a leading
+        round axis — (R, M[, d]) / (R, 2) / (R, K).  Returns the per-round
+        metric dict of (R, M) arrays (deterministic delay / energy / cost /
+        accuracy plus the decisions); observation noise stays the caller's
+        job (it needs host rng state).  ``n_rounds`` slices a prefix.
+        With a mesh (argument or session default) the run dispatches to
+        :meth:`run_sharded`.
+        """
+        self._check_obs(stream, rounds=True)
+        if stream.u is None or stream.bw_mult is None:
+            raise ValueError("session.run needs bw_mult and u on the stream "
+                             "(use route_many for decide-only scans)")
+        if n_rounds is not None:
+            stream = jax.tree_util.tree_map(lambda x: x[:n_rounds], stream)
+        mesh = self.mesh if mesh is None else mesh
+        if mesh is not None:
+            return self.run_sharded(mesh, stream,
+                                    mesh_axis=mesh_axis or self.mesh_axis)
+        if self.finetune is not None:
+            carry = (self.state, self.policy.gate_params, self._rounds_done)
+            (self.state, params, self._rounds_done), mets = \
+                _serve_run_finetune(self.policy, carry, stream, self._anchor,
+                                    self.finetune, self.n_edge, self.n_cloud)
+            self.policy = dataclasses.replace(self.policy, gate_params=params)
+            return mets
+        self.state, mets = _serve_run(
+            self.policy, self.state, stream, self.n_edge, self.n_cloud)
+        return mets
+
+    def run_sharded(self, mesh, stream: Observation,
+                    n_rounds: int | None = None, mesh_axis: str = "data"):
+        """The whole run as ONE compiled sharded scan over the stream axis.
+
+        Metrics and the final carry are identical to the dense :meth:`run`
+        (the cross-task tail runs on the all-gathered real-M batch); M pads
+        to any device count.
+        """
+        self._check_obs(stream, rounds=True)
+        if stream.u is None or stream.bw_mult is None:
+            raise ValueError("session.run_sharded needs bw_mult and u on "
+                             "the stream")
+        if not self.policy.shardable:
+            raise ValueError(
+                f"policy {self.policy.name!r} couples tasks globally in "
+                f"decide_stream and cannot run stream-sharded")
+        if self.finetune is not None:
+            raise NotImplementedError(
+                "online fine-tuning is single-mesh only for now")
+        if n_rounds is not None:
+            stream = jax.tree_util.tree_map(lambda x: x[:n_rounds], stream)
+        self.state, mets = _serve_run_sharded(
+            self.policy, self.state, stream, self.n_edge, self.n_cloud,
+            mesh, mesh_axis, stream.dx is not None)
+        return mets
+
+    # -- live model pools ---------------------------------------------------
+    def dispatch(self, sol, decode_tokens: int = 8):
+        """Execute a routed solution on the attached tier pools: each tier's
+        segment batch becomes one token workload sized by the chosen
+        fidelity.  Returns {tier: n_segments} actually dispatched."""
+        if self.pools is None:
+            raise ValueError("session has no pools attached")
+        import numpy as np
+
+        served = {}
+        for tier in (0, 1):
+            idx = np.where(np.asarray(sol["route"]) == tier)[0]
+            if len(idx) == 0:
+                continue
+            # token budget scales with chosen fidelity (resolution x fps)
+            n_tok = 16 * (1 + int(np.asarray(sol["r"])[idx].mean()))
+            toks = jnp.ones((len(idx), n_tok), jnp.int32)
+            self.pools[tier].serve_segment(toks, decode_tokens=decode_tokens)
+            served[tier] = len(idx)
+        return served

@@ -30,7 +30,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Callable, Dict
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
@@ -272,35 +272,74 @@ class Simulator:
         return dict(met, accuracy=acc, success=success)
 
     # ------------------------------------------------------------------
-    def run(self, method: Callable, n_rounds=None) -> Dict[str, float]:
-        """method(round_dict, sim_state) -> cfg dict.  Aggregates metrics."""
-        out = {k: [] for k in ("delay", "energy", "cost", "accuracy", "success", "cloud_frac")}
-        state = {}
-        for _ in range(n_rounds or self.sim.n_rounds):
-            rnd = self.sample_round()
-            cfg = method(rnd, state)
-            met = self.realize(rnd, cfg)
-            for k in ("delay", "energy", "cost", "accuracy", "success"):
-                out[k].append(met[k].mean())
-            out["cloud_frac"].append(met["route"].mean())
-        return {k: float(np.mean(vs)) for k, vs in out.items()}
+    def sample_stream(self, n_rounds=None, dx_seq=None, feature_seed=None):
+        """Sample R rounds into one round-stacked ``Observation`` stream.
 
-    def run_batch(self, method: Callable, n_rounds=None) -> Dict[str, float]:
-        """Like ``run`` but realizes all rounds in one vectorized batch.
-
-        Method calls stay sequential (methods are stateful); only the
-        realization fans out.  Note the rng interleaving differs from ``run``
-        (all rounds are sampled before any noise is drawn), so results match
-        ``run`` in distribution, not bit-for-bit.
+        ``dx_seq``: optional (R, M, d) motion features for gate-mode
+        policies; ``feature_seed`` synthesizes them from a dedicated rng
+        instead (None leaves ``dx`` empty — τ-proxy / baseline policies
+        never read it).
         """
-        state = {}
-        rnds, cfgs = [], []
-        for _ in range(n_rounds or self.sim.n_rounds):
-            rnd = self.sample_round()
-            rnds.append(rnd)
-            cfgs.append(method(rnd, state))
-        met = self.realize_batch(rnds, cfgs)
-        out = {k: float(met[k].mean(axis=1).mean())
-               for k in ("delay", "energy", "cost", "accuracy", "success")}
-        out["cloud_frac"] = float(met["route"].mean(axis=1).mean())
+        from repro.core.features import feature_dim
+        from repro.serving.policy import Observation
+
+        n = n_rounds or self.sim.n_rounds
+        rnds = [self.sample_round() for _ in range(n)]
+        if dx_seq is None and feature_seed is not None:
+            frng = np.random.default_rng(feature_seed)
+            dx_seq = jnp.asarray(
+                frng.normal(size=(n, self.sim.n_tasks, feature_dim())),
+                jnp.float32)
+        return Observation(
+            z=jnp.asarray(np.stack([rd["z"] for rd in rnds]), jnp.float32),
+            aq=jnp.asarray(np.stack([rd["aq"] for rd in rnds]), jnp.float32),
+            dx=dx_seq,
+            bw_mult=jnp.asarray(np.stack([rd["bw_mult"] for rd in rnds]),
+                                jnp.float32),
+            u=jnp.asarray(np.stack([rd["u"] for rd in rnds]), jnp.float32),
+        )
+
+    def aggregate(self, mets, aq) -> Dict[str, float]:
+        """Scalar run metrics from per-round (R, M) deterministic metrics:
+        draws the observation noise (the single host-rng noise model in
+        ``observe``) and averages — shared by ``run`` and the ``run_scan``
+        shim so every driver reports identical keys."""
+        acc, success = self.observe(np.asarray(mets["accuracy"]), np.asarray(aq))
+        out = {k: float(np.asarray(mets[k]).mean(axis=1).mean())
+               for k in ("delay", "energy", "cost")}
+        out["accuracy"] = float(acc.mean(axis=1).mean())
+        out["success"] = float(success.mean(axis=1).mean())
+        out["cloud_frac"] = float(np.asarray(mets["route"]).mean(axis=1).mean())
         return out
+
+    def run(self, policy, n_rounds=None, dx_seq=None, feature_seed=None,
+            mesh=None) -> Dict[str, float]:
+        """Serve a sampled stream through one compiled ``ServeSession.run``.
+
+        ``policy`` is a :class:`~repro.serving.policy.Policy` (build one with
+        ``make_policy``); the old ``method(rnd, state)`` host closures are no
+        longer driven here — they survive only as parity oracles in
+        :mod:`repro.serving.baselines`.
+
+        NOTE the rng interleaving follows the old ``run_batch``, not the old
+        per-round ``run``: all rounds are sampled before any observation
+        noise is drawn, so fixed-seed scalars match pre-PR-5 ``run`` in
+        distribution, not bit-for-bit.
+        """
+        from repro.serving.session import ServeSession
+
+        if callable(policy) and not hasattr(policy, "decide"):
+            raise TypeError(
+                "Simulator.run now drives Policy objects through the "
+                "compiled ServeSession; wrap the method via "
+                "repro.serving.policy.make_policy")
+        stream = self.sample_stream(n_rounds, dx_seq, feature_seed)
+        session = ServeSession(
+            policy, n_streams=self.sim.n_tasks, sim=self.sim, mesh=mesh)
+        mets = session.run(stream)
+        return self.aggregate(mets, stream.aq)
+
+    def run_batch(self, policy, n_rounds=None) -> Dict[str, float]:
+        """Deprecated alias of :meth:`run` (the realization has been fused
+        into the compiled serve scan; there is no separate batch path)."""
+        return self.run(policy, n_rounds)

@@ -246,9 +246,10 @@ def test_route_scan_matches_sequential_route_step():
                                   np.asarray(state.prev_route))
 
 
-def test_serve_scan_matches_run_batch_metrics():
-    """The whole-run compiled driver reproduces run_batch driven by a
-    RouterEngine method on a fixed seed (same rounds, same noise draw)."""
+def test_serve_scan_matches_host_loop_metrics():
+    """The whole-run compiled driver reproduces a host loop driving the
+    RouterEngine round by round on a fixed seed (same rounds, same noise
+    draw) — the R2E-VID path's host-loop oracle."""
     scfg = SimConfig(n_rounds=5, n_tasks=16, seed=7, bw_fluctuation=0.15)
     gcfg = GateConfig(d_feature=feature_dim())
     gparams = init_params(gate_specs(gcfg), jax.random.PRNGKey(0))
@@ -261,15 +262,16 @@ def test_serve_scan_matches_run_batch_metrics():
     dx_seq = jnp.asarray(
         frng.normal(size=(scfg.n_rounds, scfg.n_tasks, feature_dim())), jnp.float32)
     engine = RouterEngine(PROB, gcfg, gparams, n_streams=scfg.n_tasks)
-    step = {"i": 0}
-
-    def method(rnd, state):
-        sol = engine.step(dx_seq[step["i"]], jnp.asarray(rnd["z"]),
-                          jnp.asarray(rnd["aq"]))
-        step["i"] += 1
-        return {k: np.asarray(sol[k]) for k in ("route", "r", "p", "v")}
-
-    out_b = sim_b.run_batch(method)
+    rnds, cfgs = [], []
+    for i in range(scfg.n_rounds):
+        rnd = sim_b.sample_round()
+        sol = engine.step(dx_seq[i], jnp.asarray(rnd["z"]), jnp.asarray(rnd["aq"]))
+        rnds.append(rnd)
+        cfgs.append({k: np.asarray(sol[k]) for k in ("route", "r", "p", "v")})
+    met = sim_b.realize_batch(rnds, cfgs)
+    out_b = {k: float(met[k].mean(axis=1).mean())
+             for k in ("delay", "energy", "cost", "accuracy", "success")}
+    out_b["cloud_frac"] = float(met["route"].mean(axis=1).mean())
     assert set(out_a) == set(out_b)
     for k in out_a:
         np.testing.assert_allclose(out_a[k], out_b[k], atol=1e-5, err_msg=k)

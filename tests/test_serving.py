@@ -1,10 +1,15 @@
-"""Serving simulator + baselines + paper-claim bands + straggler hedging."""
+"""Serving simulator + baselines + paper-claim bands + straggler hedging.
+
+The paper-claim bands run every method — baselines and R2E-VID alike —
+through the same compiled ``ServeSession.run`` scan (``Simulator.run``
+drives :mod:`repro.serving.policy` policies; the old host closures survive
+only as parity oracles, covered by tests/test_policy.py)."""
 import numpy as np
 import pytest
 
 from repro.core.cost_model import SystemConfig, accuracy_table
 from repro.runtime.straggler import hedged_dispatch, p99
-from repro.serving.baselines import make_method
+from repro.serving.policy import make_policy
 from repro.serving.simulator import SimConfig, Simulator
 
 SYS = SystemConfig()
@@ -13,9 +18,9 @@ SYS = SystemConfig()
 def _run(name, *, req="stable", fluct=0.1, seed=42, **kw):
     sim = Simulator(SYS, SimConfig(n_rounds=6, n_tasks=50, requirement=req,
                                    bw_fluctuation=fluct, seed=seed))
-    m = make_method(name, SYS, **kw)
+    policy = make_policy(name, SYS, **kw)
     sim.rng = np.random.default_rng(seed)
-    return sim.run(m)
+    return sim.run(policy)
 
 
 def test_r2evid_success_band():
@@ -40,9 +45,9 @@ def test_r2evid_beats_nominal_methods_on_success():
 def _run_ablation(**kw):
     sim = Simulator(SYS, SimConfig(n_rounds=6, n_tasks=50, requirement="fluctuating",
                                    bw_fluctuation=0.15, seed=42))
-    m = make_method("R2E-VID", SYS, **kw)
+    policy = make_policy("R2E-VID", SYS, **kw)
     sim.rng = np.random.default_rng(42)
-    return sim.run(m)
+    return sim.run(policy)
 
 
 def test_ablation_directions():
