@@ -37,7 +37,10 @@ Prints ``name,us_per_call,derived`` CSV lines (the repo benchmark contract):
                            measured, not assumed
 
 With ``--json`` the same rows are written to ``BENCH_router.json`` so every
-PR records the perf trajectory (CI uploads it as an artifact).  With
+PR records the perf trajectory (CI uploads it as an artifact), and a
+one-line snapshot (commit, date, backend, headline router/ and sweep rows)
+is appended to ``BENCH_history.jsonl`` — the append-only per-PR perf log
+that survives baseline refreshes overwriting the JSON.  With
 ``--check PATH`` the run becomes a regression gate: any benchmark more than
 ``REGRESSION_FACTOR``x slower than the same-named row in the checked-in
 baseline fails the process (loose threshold — shared runners are noisy and
@@ -48,6 +51,7 @@ from __future__ import annotations
 import argparse
 import json
 import pathlib
+import subprocess
 import sys
 import time
 
@@ -78,7 +82,8 @@ def bench_route_step(streams: int, steps: int, window: int = 8,
     from repro.core.cost_model import SystemConfig
     from repro.core.features import feature_dim
     from repro.core.gating import GateConfig, gate_specs
-    from repro.core.robust import RobustProblem, solve_ccg, solve_ccg_while
+    from repro.core.robust import (RobustProblem, solve_ccg, solve_ccg_fused,
+                                   solve_ccg_while)
     from repro.core.router import RouterEngine, route
     from repro.models.params import init_params
 
@@ -110,6 +115,12 @@ def bench_route_step(streams: int, steps: int, window: int = 8,
     us_scan = _timeit(scan_round, max(steps // 4, 3)) / scan_segments
     scan_seg_per_s = streams / (us_scan / 1e6)
 
+    def ccg_fused():
+        sol = solve_ccg_fused(prob, z, aq)
+        jax.block_until_ready(sol["route"])
+
+    us_ccg_fused = _timeit(ccg_fused, steps)
+
     def ccg():
         sol = solve_ccg(prob, z, aq)
         jax.block_until_ready(sol["route"])
@@ -133,6 +144,8 @@ def bench_route_step(streams: int, steps: int, window: int = 8,
         ("router/route_step", us_step, f"segments_per_s={seg_per_s:.0f}"),
         ("router/route_scan_per_segment", us_scan,
          f"segments_per_s={scan_seg_per_s:.0f},scan_len={scan_segments}"),
+        ("router/solve_ccg_fused", us_ccg_fused,
+         f"tasks={streams},vs_unrolled={us_ccg / max(us_ccg_fused, 1e-9):.2f}x"),
         ("router/solve_ccg", us_ccg, f"tasks={streams}"),
         ("router/solve_ccg_while", us_ccg_while,
          f"tasks={streams},unrolled_speedup={us_ccg_while / max(us_ccg, 1e-9):.2f}x"),
@@ -190,7 +203,7 @@ def bench_streams_sweep(sweep, steps: int):
     from repro.core.cost_model import SystemConfig
     from repro.core.features import feature_dim
     from repro.core.gating import GateConfig, gate_specs, gate_step_batch, init_batch_state
-    from repro.core.robust import RobustProblem, solve_ccg
+    from repro.core.robust import RobustProblem, solve_ccg_fused
     from repro.core.router import (
         RouterEngine,
         enforce_bandwidth,
@@ -237,10 +250,10 @@ def bench_streams_sweep(sweep, steps: int):
             jax.block_until_ready(route)
 
         def bench_ccg():
-            sol = solve_ccg(prob, z, aq)
+            sol = solve_ccg_fused(prob, z, aq)
             jax.block_until_ready(sol["route"])
 
-        sol0 = solve_ccg(prob, z, aq)
+        sol0 = solve_ccg_fused(prob, z, aq)
         sol_fixed = {k: sol0[k] for k in ("route", "r", "p", "v")}
 
         def bench_repair():
@@ -418,9 +431,32 @@ def main():
                 for name, us, derived in rows
             ],
         }
-        path = pathlib.Path(__file__).resolve().parent.parent / "BENCH_router.json"
+        root = pathlib.Path(__file__).resolve().parent.parent
+        path = root / "BENCH_router.json"
         path.write_text(json.dumps(out, indent=2) + "\n")
         print(f"wrote {path}")
+
+        # append-only per-PR trajectory: the baseline JSON is overwritten on
+        # every refresh, so the history line is what lets a later PR see the
+        # headline rows' evolution without archaeology through git
+        headline = {
+            name: round(us, 2) for name, us, _ in rows
+            if name.startswith(("router/", "sweep/ccg@", "sweep/route_step@"))
+        }
+        try:
+            commit = subprocess.run(
+                ["git", "rev-parse", "--short", "HEAD"], cwd=root,
+                capture_output=True, text=True, check=True).stdout.strip()
+        except (OSError, subprocess.CalledProcessError):
+            commit = "unknown"
+        snap = {"commit": commit,
+                "date": time.strftime("%Y-%m-%dT%H:%M:%S"),
+                "backend": jax.default_backend(),
+                "config": out["config"], "headline": headline}
+        hist = root / "BENCH_history.jsonl"
+        with hist.open("a") as f:
+            f.write(json.dumps(snap) + "\n")
+        print(f"appended snapshot to {hist}")
 
     if n_bad:
         sys.exit(f"{n_bad} benchmark(s) regressed >{REGRESSION_FACTOR}x")

@@ -173,6 +173,27 @@ def gate_scan_batch(cfg: GateConfig, p, dxs, states=None):
     return jax.vmap(lambda d, s: gate_scan(cfg, p, d, s))(dxs, states)
 
 
+def gate_window_scan(cfg: GateConfig, p, dxs, state: GateBatchState | None = None,
+                     *, force: str = "auto"):
+    """dxs: (M, T, d) -> (taus (M, T), gate_means (M, T), final_state).
+
+    Time-scan of the fused batched streaming step — the whole stream batch
+    advances one segment per scan tick through ``gate_step_batch``, so the
+    windowed API shares the streaming path's kernel dispatch and O(d)
+    incremental volatility instead of vmapping a per-stream ``lax.scan``
+    (``gate_scan_batch``, kept for ``gate_loss`` training).
+    """
+    if state is None:
+        state = init_batch_state(cfg, dxs.shape[0])
+
+    def body(s, dx):
+        s, out = gate_step_batch(cfg, p, s, dx, force=force)
+        return s, out
+
+    final, (taus, gs) = jax.lax.scan(body, state, jnp.moveaxis(dxs, 1, 0))
+    return taus.T, gs.T, final
+
+
 # ---------------------------------------------------------------------------
 # Meta-training (offline warm-up): L = L_acc + λ1·L_lat + λ2·L_comp
 #   L_acc : BCE of τ against the oracle cloud-benefit label

@@ -44,6 +44,7 @@ from repro.core.lattice import DecisionLattice
 from repro.kernels.ccg_encode.ops import ccg_encode
 from repro.kernels.ccg_master.ops import ccg_master
 from repro.kernels.ccg_master.ref import BIG  # shared infeasibility sentinel
+from repro.kernels.ccg_solve.ops import ccg_solve
 
 
 def _poles(num_versions: int, gamma: int):
@@ -291,6 +292,42 @@ def solve_ccg(prob: RobustProblem, difficulty, acc_req, max_iters: int = 8,
 
     route, r_idx, p_idx, v_star, none_ok = _finish_solution(
         prob, code, best, rec_all, y_best)
+    return {
+        "route": route, "r": r_idx, "p": p_idx, "v": v_star,
+        "o_up": o_up, "o_down": o_down, "iters": iters, "infeasible": none_ok,
+    }
+
+
+@partial(jax.jit, static_argnames=("max_iters", "theta", "force"))
+def solve_ccg_fused(prob: RobustProblem, difficulty, acc_req,
+                    max_iters: int = 8, theta: float = 1e-4, warm_y=None,
+                    force: str = "auto"):
+    """Alg. 2 as ONE fused solve — the serving hot path since PR 6.
+
+    Same contract as :func:`solve_ccg` (decisions, bounds, and iteration
+    counts are bit-identical — parity-locked in tests), but the entire
+    alternation (encode → master argmin → SP pole selection → η update,
+    min(max_iters, P+1) steps) dispatches to the ``ccg_solve`` kernel triple
+    instead of one encode + one master call per unrolled step.  No (M, P, F)
+    recourse slab exists anywhere: η is a running (M, F) max and recourse
+    values are K-fold masked mins over the (F, K) cost table (exact — see
+    kernels/ccg_solve).  The jnp ref is the CPU hot path with a batch-level
+    early-exit while_loop + live-lane compaction; the Pallas kernel keeps
+    the per-lane solver state VMEM-resident across all steps on TPU.
+
+    ``solve_ccg`` and ``solve_ccg_while`` are retained as the bit-exact
+    oracles (and for the slab-master Pallas path's parity tests).
+    """
+    lat = prob.lat
+    if warm_y is None:
+        warm_y = -jnp.ones(jnp.asarray(difficulty).shape[0], jnp.int32)
+    y_f, v_star, o_up, o_down, iters, none_ok = ccg_solve(
+        jnp.asarray(difficulty, jnp.float32), jnp.asarray(acc_req, jnp.float32),
+        lat.rn_flat, lat.pn_flat, lat.tier_flat, lat.b2_flat,
+        prob.poles * lat.u_dev, lat.c1_flat, warm_y.astype(jnp.int32),
+        margin=lat.sys.acc_margin_robust, num_versions=lat.sys.num_versions,
+        max_iters=max_iters, theta=theta, force=force)
+    route, r_idx, p_idx = lat.unflatten_index(y_f)
     return {
         "route": route, "r": r_idx, "p": p_idx, "v": v_star,
         "o_up": o_up, "o_down": o_down, "iters": iters, "infeasible": none_ok,

@@ -31,16 +31,17 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.cost_model import SystemConfig, accuracy_at, accuracy_stage1
+from repro.core.cost_model import SystemConfig, accuracy_stage1, fps_norm, res_norm
 from repro.core.gating import (
     GateBatchState,
     GateConfig,
-    gate_scan_batch,
     gate_step_batch,
+    gate_window_scan,
     init_batch_state,
 )
 from repro.core.lattice import DecisionLattice
-from repro.core.robust import BIG, RobustProblem, solve_ccg
+from repro.core.robust import RobustProblem, solve_ccg_fused
+from repro.kernels.c6_tail.ops import c6_tail
 
 
 @dataclasses.dataclass(frozen=True)
@@ -100,7 +101,7 @@ def stage1_configure(sys_or_lat, taus, difficulty, acc_req, prev_route, prev_tau
 # C6 bandwidth repair
 # ---------------------------------------------------------------------------
 def enforce_bandwidth(sys_or_lat, sol, difficulty, acc_req, total_budget=None,
-                      rounds: int = 8):
+                      rounds: int = 8, force: str = "auto"):
     """Demote (r, p) of over-budget tasks with the largest bandwidth draw that
     remain feasible after demotion; fixed-round vectorized repair.
 
@@ -109,18 +110,20 @@ def enforce_bandwidth(sys_or_lat, sol, difficulty, acc_req, total_budget=None,
     instead of one scalar ``.at[pick].set`` demotion per round, so the repair
     converges in ~#fidelity-levels rounds independent of the batch size M.
 
-    Table-free: candidate-demotion accuracies are evaluated pointwise at the
-    (r, p_dn) / (r_dn, p) configs via ``accuracy_at`` (bitwise identical to
-    gathering the broadcast table this path used to build), and the
-    round-invariant route-indexed bandwidth columns are hoisted out of the
-    scan body — each round is then two ``take_along_axis`` gathers on the
-    (M, N·Z) panel plus O(M) formula evaluations.
+    The per-task tail of each round — current draw, candidate-demotion
+    accuracies, reclaimable gain — is the fused ``c6_tail`` kernel on the
+    hoisted route-indexed (M, N·Z) bandwidth panel (bit-identical to the
+    historical ``take_along_axis`` + ``accuracy_at`` body); only the global
+    argsort/prefix choice stays here.  Rounds are self-terminating: once a
+    round demotes nothing (or the budget holds), every later round is a
+    deterministic no-op on the same (r, p), so the scan skips the tail work
+    under a ``lax.cond`` and emits the bit-identical ``excess + budget``
+    history entry.
     """
     lat = _as_lattice(sys_or_lat)
     sys = lat.sys
     budget = sys.total_bw_mbps if total_budget is None else total_budget
 
-    margin = sys.acc_margin_robust
     m = sol["r"].shape[0]
     nz = sys.n_fps
     # C6 demotion never flips the route, so the per-task (N, Z) bandwidth
@@ -130,35 +133,46 @@ def enforce_bandwidth(sys_or_lat, sol, difficulty, acc_req, total_budget=None,
     bw_panel = bw_panel.reshape(bw_panel.shape[0], -1)     # (M, N·Z)
     take_bw = lambda r, p: jnp.take_along_axis(
         bw_panel, (r * nz + p)[:, None], axis=1)[:, 0]
+    z = jnp.asarray(difficulty, jnp.float32)
+    acc_thr = jnp.asarray(acc_req, jnp.float32) + sys.acc_margin_robust
+    rn = res_norm(sys)
+    pn = fps_norm(sys)
 
     def round_fn(state, _):
-        r, p = state
+        r, p, active = state
         bw = take_bw(r, p)
         excess = bw.sum() - budget
-        # candidate demotion: prefer dropping fps, then resolution
-        p_dn = jnp.maximum(p - 1, 0)
-        r_dn = jnp.maximum(r - 1, 0)
-        f_pdn = accuracy_at(sys, difficulty, r, p_dn, sol["v"], sol["route"])
-        f_rdn = accuracy_at(sys, difficulty, r_dn, p, sol["v"], sol["route"])
-        can_p = (p > 0) & (f_pdn >= acc_req + margin)
-        can_r = (r > 0) & (f_rdn >= acc_req + margin)
-        gain_p = bw - take_bw(r, p_dn)
-        gain_r = bw - take_bw(r_dn, p)
-        gain = jnp.where(can_p, gain_p, jnp.where(can_r, gain_r, -BIG))
-        # top-k demotion: in descending-gain order, demote tasks while the
-        # cumulative reclaimed bandwidth is still short of the excess
-        order = jnp.argsort(-gain)
-        gain_sorted = gain[order]
-        cum_before = jnp.concatenate(
-            [jnp.zeros((1,), gain.dtype), jnp.cumsum(gain_sorted)[:-1]]
-        )
-        demote_sorted = (excess > 0) & (cum_before < excess) & (gain_sorted > 0)
-        demote = jnp.zeros((m,), bool).at[order].set(demote_sorted)
-        r = jnp.where(demote & ~can_p, r_dn, r)
-        p = jnp.where(demote & can_p, p_dn, p)
-        return (r, p), excess + budget
 
-    (r, p), bw_hist = jax.lax.scan(round_fn, (sol["r"], sol["p"]), None, length=rounds)
+        def demote_round(rp):
+            r, p = rp
+            _, gain, can_p = c6_tail(
+                bw_panel, r, p, sol["v"], sol["route"], z, acc_thr, rn, pn,
+                n_fps=nz, force=force)
+            p_dn = jnp.maximum(p - 1, 0)
+            r_dn = jnp.maximum(r - 1, 0)
+            # top-k demotion: in descending-gain order, demote tasks while the
+            # cumulative reclaimed bandwidth is still short of the excess
+            order = jnp.argsort(-gain)
+            gain_sorted = gain[order]
+            cum_before = jnp.concatenate(
+                [jnp.zeros((1,), gain.dtype), jnp.cumsum(gain_sorted)[:-1]]
+            )
+            demote_sorted = (cum_before < excess) & (gain_sorted > 0)
+            demote = jnp.zeros((m,), bool).at[order].set(demote_sorted)
+            return (jnp.where(demote & ~can_p, r_dn, r),
+                    jnp.where(demote & can_p, p_dn, p),
+                    demote.any())
+
+        def skip_round(rp):
+            r, p = rp
+            return r, p, jnp.asarray(False)
+
+        r, p, progressed = jax.lax.cond(
+            active & (excess > 0), demote_round, skip_round, (r, p))
+        return (r, p, progressed), excess + budget
+
+    (r, p, _), bw_hist = jax.lax.scan(
+        round_fn, (sol["r"], sol["p"], jnp.asarray(True)), None, length=rounds)
     return dict(sol, r=r, p=p), bw_hist
 
 
@@ -209,8 +223,8 @@ def _two_stage_select(
     )
     # Stage-1 picks (route, r) at max fps — seed CCG with that configuration
     warm_y = lat.flatten_index(warm_route, warm_r, lat.sys.n_fps - 1)
-    sol = solve_ccg(prob, difficulty, acc_req, warm_y=warm_y.astype(jnp.int32),
-                    force=force)
+    sol = solve_ccg_fused(prob, difficulty, acc_req,
+                          warm_y=warm_y.astype(jnp.int32), force=force)
     # Stage-1 consistency overrides Stage-2 route flips that the gate forbids
     sol = dict(sol, route=apply_temporal_consistency(
         sol["route"], prev_route, taus, prev_tau, rcfg
@@ -280,7 +294,7 @@ def route_step(
         force=force
     )
     sol, bw_hist = enforce_bandwidth(lat, sol, difficulty, acc_req,
-                                     rounds=rcfg.repair_rounds)
+                                     rounds=rcfg.repair_rounds, force=force)
     sol["bw_history"] = bw_hist
     new_state = RouterState(
         prev_route=sol["route"].astype(jnp.int32),
@@ -376,7 +390,7 @@ class RouterEngine:
 # ---------------------------------------------------------------------------
 # Full two-stage pipeline (windowed / stateless)
 # ---------------------------------------------------------------------------
-@partial(jax.jit, static_argnames=("gate_cfg", "rcfg"))
+@partial(jax.jit, static_argnames=("gate_cfg", "rcfg", "force"))
 def route(
     prob: RobustProblem,
     gate_cfg: GateConfig,
@@ -387,12 +401,15 @@ def route(
     prev_route=None,      # (M,) previous segment's route (-1 = none)
     prev_tau=None,
     rcfg: RouterConfig = RouterConfig(),
+    force: str = "auto",
 ):
     """Windowed stateless routing, jit-compiled end to end.
 
-    Scans the gate over the whole (M, T, d) feature window, then runs the
-    same ``_two_stage_select`` + C6 repair as the streaming step — one
-    compiled program instead of an eager op-by-op dispatch chain.
+    Scans the fused batched gate step over the (M, T, d) feature window —
+    the same ``gate_step_batch`` cell the streaming engine advances, so the
+    windowed API shares its kernel dispatch and incremental volatility
+    instead of paying the per-stream ``lax.scan`` composition — then runs
+    the same ``_two_stage_select`` + C6 repair as the streaming step.
     """
     m = dx_segments.shape[0]
     if prev_route is None:
@@ -400,13 +417,15 @@ def route(
     if prev_tau is None:
         prev_tau = jnp.zeros((m,))
 
-    taus_seq, gates, _ = gate_scan_batch(gate_cfg, gate_params, dx_segments)
+    taus_seq, _gates, _ = gate_window_scan(gate_cfg, gate_params, dx_segments,
+                                           force=force)
     taus = taus_seq[:, -1]
 
     sol = _two_stage_select(
-        prob, taus, difficulty, acc_req, prev_route, prev_tau, rcfg
+        prob, taus, difficulty, acc_req, prev_route, prev_tau, rcfg,
+        force=force
     )
     sol, bw_hist = enforce_bandwidth(prob.lat, sol, difficulty, acc_req,
-                                     rounds=rcfg.repair_rounds)
+                                     rounds=rcfg.repair_rounds, force=force)
     sol["bw_history"] = bw_hist
     return sol

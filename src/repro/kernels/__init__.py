@@ -12,9 +12,18 @@ Validated in interpret mode on CPU; compiled natively on TPU.
   ccg_master       — masked CCG master step (paper Alg. 2 MP1, unrolled solver)
   ccg_encode       — fused per-task CCG encoding (accuracy -> feasibility
                      bitmask -> recourse slab, table-free routing hot path)
+  ccg_solve        — fully fused CCG solver: encode -> master/SP alternation
+                     -> η updates across all iterations in one kernel call
+  c6_tail          — fused C6 bandwidth-repair tail (per-round demotion
+                     candidates: draw, accuracies, reclaimable gain)
+
+See README.md in this directory for the kernel-family map and the
+ref-vs-Pallas dispatch rules (``force=`` pins).
 """
+from repro.kernels.c6_tail.ops import c6_tail  # noqa: F401
 from repro.kernels.ccg_encode.ops import ccg_encode  # noqa: F401
 from repro.kernels.ccg_master.ops import ccg_master  # noqa: F401
+from repro.kernels.ccg_solve.ops import ccg_solve  # noqa: F401
 from repro.kernels.decode_attention.ops import decode_attention  # noqa: F401
 from repro.kernels.flash_attention.ops import flash_attention  # noqa: F401
 from repro.kernels.mamba_scan.ops import selective_scan  # noqa: F401

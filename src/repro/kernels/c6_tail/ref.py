@@ -1,0 +1,53 @@
+"""Pure-jnp oracle for the fused C6 repair tail (one demotion round's gains).
+
+Every C6 bandwidth-repair round evaluates, for each task, the bandwidth draw
+of its current (r, p) config plus the two candidate demotions (drop fps,
+drop resolution), their pointwise accuracies, and the reclaimable-bandwidth
+gain.  Historically that was two ``take_along_axis`` gathers on the hoisted
+route-indexed (M, N·Z) bandwidth panel plus two ``accuracy_at`` formula
+evaluations dispatched separately; this ref fuses the whole tail into one
+traced function (the CPU hot path), and the Pallas kernel keeps the panel
+tile resident and one-hot-folds the gathers on TPU.
+
+Bit-parity contract: the same gathers of the same panel and the same
+``_accuracy_formula`` elementwise ops in the same order as the historical
+``enforce_bandwidth`` round body — decisions and bandwidth histories are
+bit-identical (tests/test_router.py locks this against the table-building
+golden; tests/test_kernels.py locks kernel-vs-ref).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.cost_model import _accuracy_formula
+from repro.kernels.ccg_master.ref import BIG  # shared infeasibility sentinel
+
+
+def c6_tail_ref(bw_panel, r, p, v, route, z, acc_thr, rn, pn, n_fps: int):
+    """One repair round's demotion candidates for a task batch.
+
+    bw_panel: (M, N·Z) route-indexed bandwidth panel (flat r·Z + p minor);
+    r/p/v/route: (M,) current decision indices; z: (M,) difficulty;
+    acc_thr: (M,) accuracy floor (A^q + robust margin); rn: (N,) / pn: (Z,)
+    normalized accuracy-formula coordinates.
+
+    Returns ``(bw, gain, can_p)``: the current per-task draw, the reclaimed
+    bandwidth of each task's preferred feasible demotion (-BIG when neither
+    demotion stays feasible), and whether that demotion is the fps drop.
+    """
+    take_bw = lambda ri, pi: jnp.take_along_axis(
+        bw_panel, (ri * n_fps + pi)[:, None], axis=1)[:, 0]
+    bw = take_bw(r, p)
+    # candidate demotion: prefer dropping fps, then resolution
+    p_dn = jnp.maximum(p - 1, 0)
+    r_dn = jnp.maximum(r - 1, 0)
+    vf = v.astype(jnp.float32)
+    tf = route.astype(jnp.float32)
+    f_pdn = _accuracy_formula(z, rn[r], pn[p_dn], vf, tf)
+    f_rdn = _accuracy_formula(z, rn[r_dn], pn[p], vf, tf)
+    can_p = (p > 0) & (f_pdn >= acc_thr)
+    can_r = (r > 0) & (f_rdn >= acc_thr)
+    gain_p = bw - take_bw(r, p_dn)
+    gain_r = bw - take_bw(r_dn, p)
+    gain = jnp.where(can_p, gain_p, jnp.where(can_r, gain_r, -BIG))
+    return bw, gain, can_p

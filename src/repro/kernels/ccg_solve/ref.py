@@ -1,0 +1,249 @@
+"""Pure-jnp oracle for the fully fused CCG solve (paper Alg. 2, end to end).
+
+PR 4 fused the *encode* (accuracy formula -> feasibility bitmask -> recourse
+slab); the solver still dispatched one master + SP update per unrolled step
+from ``repro.core.robust.solve_ccg``.  This ref IS the table-free CPU hot
+path for the whole alternation: encode, master argmin, exact SP pole
+selection, and the running η-max all live in one traced function, so XLA
+fuses the entire solve into a handful of (M, F) passes with no (M, P, F)
+recourse slab materialized at all — η is a running (M, F) max and every
+recourse value is recomputed as a K-fold masked min over the (F, K) cost
+table (bit-identical to gathering the (P, F, 2^K) lookup: entry ``[p, f, c]``
+of that lookup *is* ``min_{k∈c} b2[f, k]·(1+u_p,k)``, float min is exact, and
+identical-operand multiplies are bitwise deterministic).
+
+Decisions, bounds, and iteration counts are bit-identical to
+``solve_ccg`` / ``solve_ccg_while`` (the retained oracles — covered by
+tests/test_kernels.py and tests/test_robust.py).  Three exactness-preserving
+trims keep the chain short:
+
+  * argmin/argmax are computed as min/max + first-index-achieving-it (a
+    masked iota min), which is bit-identical to ``jnp.argmin``/``argmax``
+    tie-breaking and avoids the second gather XLA lowers for
+    ``take_along_axis``;
+  * the ``has_scen`` carry is dropped: cold lanes start η at 0 (recourse
+    values are ≥ 0, so the first real scenario's max overwrites it) and the
+    warm seed writes its pole's recourse row directly;
+  * after ``unroll_head`` full-batch steps the batch-level early-exit
+    ``while_loop`` takes over on a *compacted* batch: the live lanes are
+    stable-partition-gathered into the narrowest of {M/4, M/2} that holds
+    them (per-lane math is lane-independent, so compaction cannot change any
+    lane's trajectory), and when more than half the lanes are still live —
+    the cold megabatch case — one more live-gated full-batch step runs first
+    to push the count under the threshold before re-picking the width.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cost_model import _accuracy_formula
+from repro.kernels.ccg_master.ref import BIG  # shared infeasibility sentinel
+
+
+def ccg_solve_ref(z, aq, rn_flat, pn_flat, tier_flat, b2_flat, u_all, c1,
+                  warm_y, margin, num_versions: int, max_iters: int,
+                  theta: float, unroll_head: int = 2):
+    """Fused CCG solve for a task batch.
+
+    z/aq: (M,) difficulty and accuracy requirement; rn/pn/tier_flat: (F,)
+    normalized option coordinates; b2_flat: (F, K) second-stage costs;
+    u_all: (P, K) pole deviations (poles · ũ); c1: (F,) first-stage costs;
+    warm_y: (M,) int32 flat warm starts (-1 = cold); margin: robust accuracy
+    margin; theta: CCG gap tolerance.
+
+    Returns ``(y_f, v_star, o_up, o_down, iters, infeasible)`` — the
+    converged first-stage flat index and second-stage version (both with the
+    all-infeasible max-accuracy fallback already applied), the objective
+    bounds, per-lane iteration counts, and the infeasibility flags.
+    """
+    m = z.shape[0]
+    F = rn_flat.shape[0]
+    K = num_versions
+    P = u_all.shape[0]
+    opu = 1.0 + u_all                                     # (P, K)
+    kbit = jnp.arange(K, dtype=jnp.int32)
+    IOTA_F = jnp.arange(F, dtype=jnp.int32)[None]
+    IOTA_P = jnp.arange(P, dtype=jnp.int32)[None]
+
+    # ---- encode: feasibility bitmask + flat accuracy argmax, K-folded ----
+    z2 = jnp.asarray(z)[:, None]
+    thr = (jnp.asarray(aq) + margin)[:, None]
+    rn, pn, tf = rn_flat[None, :], pn_flat[None, :], tier_flat[None, :]
+    code = jnp.zeros((m, F), jnp.int8)
+    bv = bk = None
+    for k in range(K):
+        f_k = _accuracy_formula(z2, rn, pn, jnp.float32(k), tf)   # (M, F)
+        code = code | jnp.where(f_k >= thr, jnp.int8(1 << k), jnp.int8(0))
+        # running argmax over the flat (F·K) space (k minor): track the best
+        # value and its k per option, resolve the F argmax once at the end
+        if k == 0:
+            bv, bk = f_k, jnp.zeros((m, F), jnp.int8)
+        else:
+            up = f_k > bv
+            bv = jnp.where(up, f_k, bv)
+            bk = jnp.where(up, jnp.int8(k), bk)
+    bmax = bv.max(axis=1)
+    by = jnp.where(bv == bmax[:, None], IOTA_F, F).min(axis=1)
+    best = by * K + jnp.take_along_axis(bk, by[:, None], axis=1)[:, 0].astype(jnp.int32)
+    fs_ok = code > 0                                      # (M, F)
+
+    def sp_at(code, y, mm):
+        """(mm, P) recourse of option y at every pole — K-fold, no table."""
+        b2y = b2_flat[y]                                  # (mm, K) row gather
+        cy = jnp.take_along_axis(code, y[:, None], axis=1)[:, 0]
+        sp = jnp.full((mm, P), BIG, jnp.float32)
+        for k in range(K):
+            term = b2y[:, k][:, None] * opu[None, :, k]   # (mm, P)
+            bit = ((cy >> k) & 1) > 0
+            sp = jnp.where(bit[:, None], jnp.minimum(sp, term), sp)
+        return sp
+
+    def rec_at(code, pole, mm):
+        """(mm, F) recourse row of each lane's pole — K-fold, no table."""
+        uw = opu[pole]                                    # (mm, K) row gather
+        rec = jnp.full((mm, F), BIG, jnp.float32)
+        for k in range(K):
+            term = b2_flat[None, :, k] * uw[:, k][:, None]
+            bit = ((code >> k) & 1) > 0
+            rec = jnp.where(bit, jnp.minimum(rec, term), rec)
+        return rec
+
+    def step(code, fs_ok, carry):
+        """One masked master/adversary alternation for a (sub-)batch."""
+        mm = code.shape[0]
+        stepv, eta_run, o_up, o_down, y_best, iters, done = carry
+        live = ~done
+        # MP1: η is the running max of generated scenario rows
+        obj = jnp.where(fs_ok, c1[None] + eta_run, BIG)
+        od_new = obj.min(axis=1)
+        y_star = jnp.where(obj == od_new[:, None], IOTA_F, F).min(axis=1)
+        # SP: exact worst-case pole for y_star (Eq. 10 pole optimality)
+        sp_vals = sp_at(code, y_star, mm)
+        q = sp_vals.max(axis=1)
+        worst_pole = jnp.where(sp_vals == q[:, None], IOTA_P, P).min(axis=1)
+        cand = c1[y_star] + q
+        up_new = jnp.minimum(o_up, cand)
+        # the returned decision is the INCUMBENT achieving O_up, not the
+        # last master argmin (a θ-tied y_star may be worse)
+        y_best = jnp.where(live & (cand < o_up), y_star, y_best)
+        o_down = jnp.where(live, od_new, o_down)
+        o_up = jnp.where(live, up_new, o_up)
+        # done lanes' η may keep moving — every read of it is live-gated
+        eta_run = jnp.maximum(eta_run, rec_at(code, worst_pole, mm))
+        iters = iters + live.astype(jnp.int32)
+        done = jnp.where(live, (up_new - od_new) <= theta, done)
+        return (stepv + 1, eta_run, o_up, o_down, y_best, iters, done)
+
+    # ---- warm start: seed the scenario set with the warm y's worst pole ----
+    if warm_y is None:
+        warm_y = -jnp.ones((m,), jnp.int32)
+    wyc = jnp.maximum(warm_y, 0)
+    use_warm = (warm_y >= 0) & jnp.take_along_axis(fs_ok, wyc[:, None], axis=1)[:, 0]
+    rec_wy = sp_at(code, wyc, m)                          # (M, P)
+    q_w = rec_wy.max(axis=1)
+    warm_pole = jnp.where(rec_wy == q_w[:, None], IOTA_P, P).min(axis=1)
+    o_up = jnp.where(use_warm, c1[wyc] + q_w, BIG)
+    eta_run = jnp.where(use_warm[:, None], rec_at(code, warm_pole, m), 0.0)
+
+    n_steps = min(max_iters, P + 1)
+    carry = (jnp.int32(0), eta_run, o_up, jnp.full((m,), -BIG, jnp.float32),
+             wyc, jnp.zeros((m,), jnp.int32), jnp.zeros((m,), bool))
+
+    # head unroll only pays at batch sizes where the per-step fixed cost of
+    # the while_loop carry matters less than wasted full-batch steps
+    head = min(unroll_head, n_steps) if m >= 256 else 0
+    for _ in range(head):
+        carry = step(code, fs_ok, carry)
+
+    if head >= n_steps:
+        _, _, o_up, o_down, y_best, iters, done = carry
+    elif head == 0:
+        out = jax.lax.while_loop(
+            lambda c: (c[0] < n_steps) & ~c[-1].all(),
+            lambda c: step(code, fs_ok, c), carry)
+        _, _, o_up, o_down, y_best, iters, done = out
+    else:
+        mh, mq = m // 2, max(m // 4, 1)
+        stepv, eta_run, o_up, o_down, y_best, iters, done = carry
+
+        def tail_full(stepv, op):
+            eta_run, o_up, o_down, y_best, iters, done = op
+            out = jax.lax.while_loop(
+                lambda c: (c[0] < n_steps) & ~c[-1].all(),
+                lambda c: step(code, fs_ok, c),
+                (stepv, eta_run, o_up, o_down, y_best, iters, done))
+            return out[2], out[3], out[4], out[5], out[6]
+
+        def tail_compact(mc, stepv, op):
+            # stable-partition the live lanes into an mc-size batch; lane m
+            # is the out-of-bounds sentinel for dead slots (drop semantics on
+            # both the gather setup and the scatter-back)
+            eta_run, o_up, o_down, y_best, iters, done = op
+            live = ~done
+            nlive = live.sum()
+            pos = jnp.cumsum(live) - 1
+            iota_m = jnp.arange(m, dtype=jnp.int32)
+            lane = jnp.full((mc,), m, jnp.int32).at[
+                jnp.where(live, pos, m)].set(iota_m, mode="drop")
+            slot_live = jnp.arange(mc) < nlive
+            lane_c = jnp.minimum(lane, m - 1)      # clamp for safe gathers
+            code_c = code[lane_c]
+            fs_ok_c = code_c > 0
+            carry_c = (stepv, eta_run[lane_c],
+                       o_up[lane_c], o_down[lane_c], y_best[lane_c],
+                       iters[lane_c], ~slot_live | done[lane_c])
+            out = jax.lax.while_loop(
+                lambda c: (c[0] < n_steps) & ~c[-1].all(),
+                lambda c: step(code_c, fs_ok_c, c), carry_c)
+            _, _, o_up_c, o_down_c, y_best_c, iters_c, done_c = out
+            return (o_up.at[lane].set(o_up_c, mode="drop"),
+                    o_down.at[lane].set(o_down_c, mode="drop"),
+                    y_best.at[lane].set(y_best_c, mode="drop"),
+                    iters.at[lane].set(iters_c, mode="drop"),
+                    done.at[lane].set(done_c, mode="drop"))
+
+        def pick_width(stepv, op):
+            # narrowest compaction width holding every live lane (per-lane
+            # math is lane-independent, so width never changes trajectories)
+            live_n = (~op[-1]).sum()
+            return jax.lax.cond(
+                live_n <= mq,
+                lambda o: tail_compact(mq, stepv, o),
+                lambda o: jax.lax.cond(
+                    live_n <= mh,
+                    lambda oo: tail_compact(mh, stepv, oo),
+                    lambda oo: tail_full(stepv, oo),
+                    o),
+                op)
+
+        def retry(op):
+            # more than half the lanes still live: one more full-batch step
+            # typically drops the cold megabatch under the compaction
+            # threshold (the step is live-gated, so running it here is
+            # bit-identical to the full tail running it)
+            eta_run, o_up, o_down, y_best, iters, done = op
+            c2 = step(code, fs_ok,
+                      (stepv, eta_run, o_up, o_down, y_best, iters, done))
+            return pick_width(c2[0], c2[1:])
+
+        operand = (eta_run, o_up, o_down, y_best, iters, done)
+        o_up, o_down, y_best, iters, done = jax.lax.cond(
+            (~done).sum() <= mh,
+            lambda op: pick_width(stepv, op),
+            retry, operand)
+
+    # ---- epilogue: final worst pole, v*, all-infeasible fallback ----
+    sp_vals = sp_at(code, y_best, m)
+    qf = sp_vals.max(axis=1)
+    worst = jnp.where(sp_vals == qf[:, None], IOTA_P, P).min(axis=1)
+    u = u_all[worst]                                      # (M, K)
+    code_y = jnp.take_along_axis(code, y_best[:, None], axis=1)[:, 0]
+    feas_y = ((code_y[:, None] >> kbit[None]) & 1) > 0
+    vals = jnp.where(feas_y, b2_flat[y_best] * (1.0 + u), BIG)
+    vmin = vals.min(axis=1)
+    v_star = jnp.where(vals == vmin[:, None], kbit[None], K).min(axis=1)
+    none_ok = ~fs_ok.any(axis=1)
+    y_f = jnp.where(none_ok, best // K, y_best)
+    v_star = jnp.where(none_ok, best % K, v_star)
+    return y_f, v_star, o_up, o_down, iters, none_ok

@@ -1,11 +1,14 @@
 """Pallas TPU fused temporal-gating cell (paper Eq. 5-6).
 
 At fleet scale the router evaluates the gate for thousands of concurrent
-streams per scheduling tick; the cell is six small matmuls + elementwise
-chains that XLA would execute as separate HBM round-trips.  This kernel
-fuses the whole step for a (BB, d) stream tile: all six weight matrices
-(d,m)/(m,m) stay resident in VMEM, the tile makes a single pass, and the
-batched streams ride the MXU rows.
+streams per scheduling tick; the cell is a handful of small matmuls +
+elementwise chains that XLA would execute as separate HBM round-trips.
+This kernel fuses the whole step for a (BB, d) stream tile: the weight
+matrices stay resident in VMEM, the tile makes a single pass, and the
+batched streams ride the MXU rows.  Mirroring the ref, the three
+dx-projections ride one packed (d, 3m) GEMM and the two h-projections one
+(m, 2m) GEMM (column-sliced after), so the MXU sees four matmuls per tile
+instead of six.
 
 Grid = (n_b,); weights are broadcast blocks (same block for every program).
 """
@@ -23,18 +26,20 @@ def _mm(a, b):
                                preferred_element_type=jnp.float32)
 
 
-def _gate_kernel(dx_ref, h_ref, vol_ref, wg_ref, ug_ref, bg_ref, alpha_ref,
-                 wr_ref, ur_ref, br_ref, wh_ref, uh_ref, bh_ref, wo_ref, bo_ref,
-                 hout_ref, tau_ref, gmean_ref):
+def _gate_kernel(dx_ref, h_ref, vol_ref, wx_ref, ugr_ref, bg_ref, alpha_ref,
+                 br_ref, uh_ref, bh_ref, wo_ref, bo_ref,
+                 hout_ref, tau_ref, gmean_ref, *, m):
     dx = dx_ref[...].astype(jnp.float32)
     h = h_ref[...].astype(jnp.float32)
     vol = vol_ref[...].astype(jnp.float32)
     alpha = alpha_ref[0]
 
-    g = jax.nn.sigmoid(_mm(dx, wg_ref[...]) + _mm(h, ug_ref[...]) + bg_ref[...]
+    xw = _mm(dx, wx_ref[...])                        # (BB, 3m) packed g|r|h
+    hu = _mm(h, ugr_ref[...])                        # (BB, 2m) packed g|r
+    g = jax.nn.sigmoid(xw[:, :m] + hu[:, :m] + bg_ref[...]
                        + (alpha * vol)[:, None])
-    r = jax.nn.sigmoid(_mm(dx, wr_ref[...]) + _mm(h, ur_ref[...]) + br_ref[...])
-    cand = jnp.tanh(_mm(dx, wh_ref[...]) + _mm(r * h, uh_ref[...]) + bh_ref[...])
+    r = jax.nn.sigmoid(xw[:, m:2 * m] + hu[:, m:] + br_ref[...])
+    cand = jnp.tanh(xw[:, 2 * m:] + _mm(r * h, uh_ref[...]) + bh_ref[...])
     h_new = (1.0 - g) * h + g * cand
     tau = jax.nn.sigmoid(_mm(h_new, wo_ref[...]) + bo_ref[...])[:, 0]
     hout_ref[...] = h_new.astype(hout_ref.dtype)
@@ -49,18 +54,20 @@ def gate_cell(dx, h, vol, p, *, block_b: int = 256, interpret: bool = False):
     bb = min(block_b, b)
     assert b % bb == 0
     nb = b // bb
+    w_x = jnp.concatenate([p["w_g"], p["w_r"], p["w_h"]], axis=1)   # (d, 3m)
+    u_gr = jnp.concatenate([p["u_g"], p["u_r"]], axis=1)            # (m, 2m)
 
     full = lambda shape: pl.BlockSpec(shape, lambda bi: tuple(0 for _ in shape))
     out = pl.pallas_call(
-        _gate_kernel,
+        functools.partial(_gate_kernel, m=m),
         grid=(nb,),
         in_specs=[
             pl.BlockSpec((bb, d), lambda bi: (bi, 0)),
             pl.BlockSpec((bb, m), lambda bi: (bi, 0)),
             pl.BlockSpec((bb,), lambda bi: (bi,)),
-            full((d, m)), full((m, m)), full((m,)), full((1,)),
-            full((d, m)), full((m, m)), full((m,)),
-            full((d, m)), full((m, m)), full((m,)),
+            full((d, 3 * m)), full((m, 2 * m)), full((m,)), full((1,)),
+            full((m,)),
+            full((m, m)), full((m,)),
             full((m, 1)), full((1,)),
         ],
         out_specs=[
@@ -76,9 +83,9 @@ def gate_cell(dx, h, vol, p, *, block_b: int = 256, interpret: bool = False):
         interpret=interpret,
     )(
         dx, h, vol,
-        p["w_g"], p["u_g"], p["b_g"], p["alpha"].reshape(1),
-        p["w_r"], p["u_r"], p["b_r"],
-        p["w_h"], p["u_h"], p["b_h"],
+        w_x, u_gr, p["b_g"], p["alpha"].reshape(1),
+        p["b_r"],
+        p["u_h"], p["b_h"],
         p["w_o"], p["b_o"],
     )
     return out

@@ -52,7 +52,7 @@ import jax.numpy as jnp
 from repro.core.cost_model import SystemConfig, accuracy_at
 from repro.core.gating import GateConfig
 from repro.core.lattice import DecisionLattice
-from repro.core.robust import BIG, RobustProblem, solve_ccg
+from repro.core.robust import BIG, RobustProblem, solve_ccg_fused
 from repro.core.router import (
     RouterConfig,
     RouterState,
@@ -439,7 +439,7 @@ class R2EVidPolicy(Policy):
             )
             return new_state, sol
         # τ-proxy mode: cold CCG, difficulty as the gate-score proxy
-        sol = solve_ccg(self.prob, z, aq, force=self.force)
+        sol = solve_ccg_fused(self.prob, z, aq, force=self.force)
         if self.use_gate:
             taus = z
             route = apply_temporal_consistency(
@@ -453,7 +453,8 @@ class R2EVidPolicy(Policy):
         if not self._full:
             return sol
         sol, bw_hist = enforce_bandwidth(self.prob.lat, sol, z, aq,
-                                         rounds=self.rcfg.repair_rounds)
+                                         rounds=self.rcfg.repair_rounds,
+                                         force=self.force)
         # route_step always exposed the repair's bandwidth trajectory;
         # keep it so the RouterEngine shim stays drop-in (the session's
         # serve output filters it out exactly like serve_scan did)

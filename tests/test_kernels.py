@@ -319,3 +319,121 @@ def test_ccg_encode_argmax_tie_breaking():
             prob.b2_scaled, prob.rec_table, block_m=8, force=force,
             margin=sys_.acc_margin_robust, num_versions=sys_.num_versions)
         np.testing.assert_array_equal(np.asarray(best), best_tab, err_msg=force)
+
+
+_SOLVE_KEYS = ("route", "r", "p", "v", "o_up", "o_down", "iters", "infeasible")
+
+
+@pytest.mark.parametrize("m,gamma,warm", [
+    (16, 2, None),       # cold solve, exact tiling
+    (13, 2, "mixed"),    # odd M: ops padding path; warm starts with -1 misses
+    (9, 0, "hit"),       # Γ=0 degenerate pole set (P=1)
+    (256, 2, "mixed"),   # live-lane compaction tail in the jnp ref
+])
+def test_ccg_solve(m, gamma, warm):
+    """Fully fused CCG solver (jnp ref + Pallas interpret) == both retained
+    oracles — the unrolled masked ``solve_ccg`` and the early-exit
+    ``solve_ccg_while`` — bit for bit on every output: decisions, bounds,
+    iteration counts, and the infeasibility flag.  Covers warm-start misses
+    (-1 lanes), an all-infeasible lane, the Γ=0 single-pole degenerate set,
+    and the M≥256 live-lane-compaction tail."""
+    from repro.core.cost_model import SystemConfig
+    from repro.core.robust import (RobustProblem, solve_ccg, solve_ccg_fused,
+                                   solve_ccg_while)
+
+    sys_ = SystemConfig(gamma=gamma)
+    prob = RobustProblem.build(sys_)
+    rng = np.random.default_rng(m * 10 + gamma)
+    z = rng.uniform(0, 1, m)
+    aq = rng.uniform(0.5, 0.75, m)
+    aq[0] = 0.99    # all-infeasible lane: fallback config path
+    z = jnp.asarray(z, jnp.float32)
+    aq = jnp.asarray(aq, jnp.float32)
+    wy = None
+    if warm == "mixed":
+        wy = jnp.asarray(rng.integers(-1, prob.lat.n_flat, m), jnp.int32)
+    elif warm == "hit":
+        wy = jnp.asarray(rng.integers(0, prob.lat.n_flat, m), jnp.int32)
+
+    unrolled = solve_ccg(prob, z, aq, warm_y=wy)
+    early = solve_ccg_while(prob, z, aq, warm_y=wy)
+    for force in ("ref", "pallas"):
+        fused = solve_ccg_fused(prob, z, aq, warm_y=wy, force=force)
+        for k in _SOLVE_KEYS:
+            np.testing.assert_array_equal(
+                np.asarray(fused[k]), np.asarray(unrolled[k]),
+                err_msg=f"{force}:{k} vs solve_ccg")
+            np.testing.assert_array_equal(
+                np.asarray(fused[k]), np.asarray(early[k]),
+                err_msg=f"{force}:{k} vs solve_ccg_while")
+
+
+def test_ccg_solve_argmin_tie_breaking():
+    """z=0 makes accuracy independent of fps -> widespread exact objective
+    ties in the master argmin; the fused solver must break them at the
+    lowest flat index exactly like the oracles."""
+    from repro.core.cost_model import SystemConfig
+    from repro.core.robust import RobustProblem, solve_ccg, solve_ccg_fused
+
+    prob = RobustProblem.build(SystemConfig())
+    m = 6
+    z = jnp.zeros((m,), jnp.float32)
+    aq = jnp.full((m,), 0.7, jnp.float32)
+    oracle = solve_ccg(prob, z, aq)
+    for force in ("ref", "pallas"):
+        fused = solve_ccg_fused(prob, z, aq, force=force)
+        for k in _SOLVE_KEYS:
+            np.testing.assert_array_equal(
+                np.asarray(fused[k]), np.asarray(oracle[k]),
+                err_msg=f"{force}:{k}")
+
+
+@pytest.mark.parametrize("m,bm", [
+    (16, 8),     # exact tiling
+    (13, 8),     # odd M: ops padding path
+    (7, 256),    # whole batch smaller than one block
+])
+def test_c6_tail(m, bm):
+    """Fused C6 repair tail (jnp ref + Pallas interpret) == the inline
+    ``take_along_axis`` + ``accuracy_at`` round body, bit for bit: draw,
+    reclaimable gain (including -BIG infeasible-demotion lanes), and the
+    fps-vs-resolution demotion choice."""
+    from repro.core.cost_model import SystemConfig, accuracy_at, fps_norm, res_norm
+    from repro.core.lattice import DecisionLattice
+    from repro.core.robust import BIG
+    from repro.kernels.c6_tail.ops import c6_tail
+
+    sys_ = SystemConfig()
+    lat = DecisionLattice.build(sys_)
+    rng = np.random.default_rng(m)
+    z = jnp.asarray(rng.uniform(0, 1, m), jnp.float32)
+    aq = jnp.asarray(rng.uniform(0.5, 0.75, m), jnp.float32)
+    r = jnp.asarray(rng.integers(0, sys_.n_res, m), jnp.int32)
+    p = jnp.asarray(rng.integers(0, sys_.n_fps, m), jnp.int32)
+    v = jnp.asarray(rng.integers(0, sys_.num_versions, m), jnp.int32)
+    route = jnp.asarray(rng.integers(0, 2, m), jnp.int32)
+    r = r.at[0].set(0)   # p floor lane
+    p = p.at[0].set(0)   # ... gain must fall through to -BIG
+    acc_thr = aq + sys_.acc_margin_robust
+
+    panel = jnp.moveaxis(lat.bw, -1, 0)[route].reshape(m, -1)
+    take = lambda ri, pi: jnp.take_along_axis(
+        panel, (ri * sys_.n_fps + pi)[:, None], axis=1)[:, 0]
+    bw_o = take(r, p)
+    p_dn = jnp.maximum(p - 1, 0)
+    r_dn = jnp.maximum(r - 1, 0)
+    can_p_o = (p > 0) & (accuracy_at(sys_, z, r, p_dn, v, route) >= acc_thr)
+    can_r_o = (r > 0) & (accuracy_at(sys_, z, r_dn, p, v, route) >= acc_thr)
+    gain_o = jnp.where(can_p_o, bw_o - take(r, p_dn),
+                       jnp.where(can_r_o, bw_o - take(r_dn, p), -BIG))
+
+    for force in ("ref", "pallas"):
+        bw, gain, can_p = c6_tail(
+            panel, r, p, v, route, z, acc_thr, res_norm(sys_), fps_norm(sys_),
+            n_fps=sys_.n_fps, block_m=bm, force=force)
+        np.testing.assert_array_equal(np.asarray(bw), np.asarray(bw_o),
+                                      err_msg=force)
+        np.testing.assert_array_equal(np.asarray(gain), np.asarray(gain_o),
+                                      err_msg=force)
+        np.testing.assert_array_equal(np.asarray(can_p), np.asarray(can_p_o),
+                                      err_msg=force)
