@@ -29,6 +29,13 @@ Prints ``name,us_per_call,derived`` CSV lines (the repo benchmark contract):
                            ``ServeSession.run`` scan: µs per routed+realized
                            round at the default M, so baseline and R2E-VID
                            numbers are apples-to-apples compiled programs
+  policy/{name}@{scenario} — the same compiled serve run through a named
+                           adverse scenario (``repro.serving.scenarios``):
+                           availability masks, bandwidth traces, and hedged
+                           realization fused into the one scan, so the
+                           scenario engine's compiled overhead is a gated
+                           number, not a hope (all policies x edge_outage /
+                           bw_collapse, r2evid x the rest of the suite)
   sweep/{stage}@M{m}     — ``--streams-sweep`` rows: per-stage latency (gate,
                            stage1, ccg, repair, realize, and the full
                            route_step) at each stream count M, with
@@ -187,6 +194,45 @@ def bench_policies(streams: int, rounds: int, iters: int = 5):
         rows.append((f"policy/{name}", us,
                      f"rounds={rounds},streams={streams},us_per_segment="
                      f"{us / streams:.3f}"))
+    return rows
+
+
+def bench_scenarios(streams: int, rounds: int, iters: int = 5,
+                    scenarios=("edge_outage", "bw_collapse")):
+    """Degraded serving: every registered policy through the SAME compiled
+    ``ServeSession.run`` scan under the named adverse scenarios, plus
+    r2evid through the rest of the suite — ``policy/{name}@{scenario}``
+    rows with the same per-round-µs contract as ``policy/{name}``, so
+    ``--check`` gates the scenario engine's compiled overhead (availability
+    masks, bandwidth traces, hedged realization) exactly like the benign
+    path."""
+    from repro.core.cost_model import SystemConfig
+    from repro.serving.policy import POLICIES, make_policy
+    from repro.serving.scenarios import (SUITE, apply_scenario,
+                                         compile_scenario)
+    from repro.serving.session import ServeSession
+    from repro.serving.simulator import SimConfig, Simulator
+
+    sys_ = SystemConfig()
+    simc = SimConfig(n_tasks=streams, n_rounds=rounds, seed=11,
+                     bw_fluctuation=0.2)
+    stream = Simulator(sys_, simc).sample_stream(rounds)
+    cells = [(p, s) for s in scenarios for p in sorted(POLICIES)]
+    cells += [("r2evid", s) for s in SUITE if s not in scenarios]
+    rows = []
+    for name, scen in cells:
+        trace = compile_scenario(scen, sys_, simc, rounds)
+        degraded = apply_scenario(stream, trace)
+        session = ServeSession(make_policy(name, sys_), streams, sim=simc,
+                               hedge=trace.hedge)
+
+        def run(session=session, degraded=degraded):
+            mets = session.run(degraded)
+            jax.block_until_ready(mets["cost"])
+
+        us = _timeit(run, iters) / rounds
+        rows.append((f"policy/{name}@{scen}", us,
+                     f"rounds={rounds},streams={streams}"))
     return rows
 
 
@@ -408,6 +454,7 @@ def main():
     rows += bench_route_step(args.streams, args.steps)
     rows += bench_serve_scan(args.streams, args.scan_rounds)
     rows += bench_policies(args.streams, args.scan_rounds)
+    rows += bench_scenarios(args.streams, args.scan_rounds)
     rows += bench_realize(args.tasks)
     if args.streams_sweep:
         sweep = [int(s) for s in args.streams_sweep.split(",")]

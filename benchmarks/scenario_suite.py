@@ -1,0 +1,133 @@
+"""Scenario robustness suite: every registered policy through every named
+adverse scenario, with checked-in goldens (the Table-2 generalization).
+
+  PYTHONPATH=src python benchmarks/scenario_suite.py                # print
+  PYTHONPATH=src python benchmarks/scenario_suite.py --write        # refresh
+  PYTHONPATH=src python benchmarks/scenario_suite.py --check        # gate
+  PYTHONPATH=src python benchmarks/scenario_suite.py \\
+      --policies r2evid,a2_cloud_only --scenarios edge_outage,none --check
+
+Each cell is ONE compiled ``ServeSession.run`` scan over the degraded
+stream (``repro.serving.scenarios.run_scenario``); the realization is
+deterministic (no observation noise), so the goldens are reproducible to
+float32 fidelity from the (sim seed, scenario seed, M, R) tuple alone.
+
+``--write`` stores every cell's scalars in ``SCENARIO_GOLDENS.json`` at the
+repo root; ``--check`` recomputes the requested cells and fails the process
+if any metric drifts beyond ``--tol`` (relative) from its golden — the CI
+robustness gate.  A cell missing from the goldens fails ``--check`` too:
+new policies / scenarios must land with refreshed goldens.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+GOLDEN_PATH = ROOT / "SCENARIO_GOLDENS.json"
+TOL = 1e-4
+
+_METRIC_ORDER = ("cost", "delay", "accuracy", "sla_violation_rate",
+                 "sla_cost", "cloud_frac", "recovery_rounds")
+
+
+def run_cells(policies, scenarios, streams: int, rounds: int):
+    from repro.serving.scenarios import run_scenario
+
+    rows = {}
+    for scen in scenarios:
+        for pol in policies:
+            t0 = time.perf_counter()
+            rows[f"{pol}@{scen}"] = run_scenario(
+                pol, scen, streams=streams, rounds=rounds)
+            dt = time.perf_counter() - t0
+            print(f"ran {pol}@{scen} in {dt:.1f}s", flush=True)
+    return rows
+
+
+def check(rows, tol: float) -> int:
+    if not GOLDEN_PATH.exists():
+        print(f"check: {GOLDEN_PATH} missing — run with --write first")
+        return len(rows)
+    gold = json.loads(GOLDEN_PATH.read_text())
+    bad = 0
+    for key, scalars in rows.items():
+        ref = gold["rows"].get(key)
+        if ref is None:
+            print(f"check: {key} has NO golden row — refresh with --write")
+            bad += 1
+            continue
+        for metric in _METRIC_ORDER:
+            got, want = scalars[metric], ref[metric]
+            denom = max(abs(want), 1e-9)
+            drift = abs(got - want) / denom
+            if drift > tol and abs(got - want) > tol:
+                print(f"check: {key}:{metric} {got:.6f} vs golden "
+                      f"{want:.6f} (drift {drift:.2e}) DRIFT")
+                bad += 1
+    if not bad:
+        print(f"check: {len(rows)} cells within tol={tol:g} of goldens")
+    return bad
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--streams", type=int, default=64)
+    ap.add_argument("--rounds", type=int, default=30)
+    ap.add_argument("--policies", default="",
+                    help="comma-separated registry names (default: all)")
+    ap.add_argument("--scenarios", default="",
+                    help="comma-separated scenario names (default: the "
+                         "named SUITE plus the benign 'none' control)")
+    ap.add_argument("--write", action="store_true",
+                    help=f"refresh {GOLDEN_PATH.name} with this run")
+    ap.add_argument("--check", action="store_true",
+                    help="fail if any cell drifts from its golden")
+    ap.add_argument("--tol", type=float, default=TOL)
+    args = ap.parse_args()
+
+    from repro.serving.policy import POLICIES
+    from repro.serving.scenarios import SUITE
+
+    policies = ([p for p in args.policies.split(",") if p]
+                or sorted(POLICIES))
+    scenarios = ([s for s in args.scenarios.split(",") if s]
+                 or list(SUITE) + ["none"])
+
+    rows = run_cells(policies, scenarios, args.streams, args.rounds)
+
+    print("cell," + ",".join(_METRIC_ORDER))
+    for key, scalars in rows.items():
+        print(key + "," + ",".join(f"{scalars[m]:.6f}" for m in _METRIC_ORDER))
+
+    n_bad = check(rows, args.tol) if args.check else 0
+
+    if args.write:
+        if GOLDEN_PATH.exists():
+            out = json.loads(GOLDEN_PATH.read_text())
+            if (out["config"]["streams"] != args.streams
+                    or out["config"]["rounds"] != args.rounds):
+                sys.exit(f"refusing to merge {args.streams}x{args.rounds} "
+                         f"cells into goldens at "
+                         f"{out['config']['streams']}x"
+                         f"{out['config']['rounds']} — delete "
+                         f"{GOLDEN_PATH.name} to restart")
+            out["rows"].update(rows)
+        else:
+            out = {"config": {"streams": args.streams, "rounds": args.rounds,
+                              "seed": 11, "scenario_seed": 0},
+                   "rows": rows}
+        out["rows"] = {k: {m: round(v[m], 6) for m in _METRIC_ORDER}
+                       for k, v in sorted(out["rows"].items())}
+        GOLDEN_PATH.write_text(json.dumps(out, indent=2) + "\n")
+        print(f"wrote {GOLDEN_PATH}")
+
+    if n_bad:
+        sys.exit(f"{n_bad} golden cell(s) drifted beyond tol={args.tol:g}")
+
+
+if __name__ == "__main__":
+    main()

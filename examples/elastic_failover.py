@@ -31,7 +31,10 @@ except NodeFailure as e:
     cluster.kill(2)
 
 print(f"phase 2: elastic re-mesh with {cluster.alive}/{cluster.n_nodes} nodes")
-mesh = elastic_remesh(cluster.alive)
+# trainer recovery keeps the model (TP) axis as large as the survivors
+# allow; serving recovery would use prefer="data" instead (streams shard
+# along data only — see examples/serve_degraded.py)
+mesh = elastic_remesh(cluster.alive, prefer="model")
 print(f"  new mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))}")
 
 print("phase 3: restore latest checkpoint and resume")

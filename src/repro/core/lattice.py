@@ -40,6 +40,7 @@ from repro.core.cost_model import (
     res_norm,
     version_flops,
 )
+from repro.kernels.ccg_master.ref import BIG  # shared infeasibility sentinel
 
 
 def version_deviations(sys: SystemConfig) -> jnp.ndarray:
@@ -124,13 +125,27 @@ class DecisionLattice:
         """Accuracy in the flat layout: (..., F, K)."""
         return self.to_flat(self.accuracy(difficulty))
 
-    def feasible_flat(self, difficulty, acc_req, margin):
+    def tier_y_ok(self, tier_ok):
+        """(..., 2) per-tier availability -> (..., F) flat option mask.
+
+        ``tier_ok[..., t] <= 0`` marks tier t (0 = edge, 1 = cloud) outaged;
+        the returned mask is the ``y_ok`` operand every encoder/solver takes
+        to make those options infeasible.  Exact gather via ``tier_flat``.
+        """
+        t = jnp.asarray(tier_ok)
+        return jnp.where(self.tier_flat > 0.5, t[..., 1:], t[..., :1])
+
+    def feasible_flat(self, difficulty, acc_req, margin, tier_ok=None):
         """(accuracy_flat, feasibility mask) for a task batch.
 
         difficulty/acc_req: (M,).  Returns ((M, F, K), (M, F, K) bool) with
-        feasibility f >= A^q + margin.
+        feasibility f >= A^q + margin.  With ``tier_ok`` ((..., 2)
+        availability), outaged tiers' options are clamped to -BIG accuracy —
+        infeasible AND out of any fallback argmax over the returned surface.
         """
         f = self.accuracy_flat(difficulty)
+        if tier_ok is not None:
+            f = jnp.where(self.tier_y_ok(tier_ok)[..., None] > 0, f, -BIG)
         return f, f >= (jnp.asarray(acc_req) + margin)[..., None, None]
 
     # -- solution costing ----------------------------------------------

@@ -110,20 +110,23 @@ class RobustProblem:
         return self.lat.b2
 
 
-def _encode_tasks(prob: RobustProblem, difficulty, acc_req):
+def _encode_tasks(prob: RobustProblem, difficulty, acc_req, tier_ok=None):
     """Table-based per-task CCG inputs — the encode ORACLE.
 
     Builds the full (M, F, K) accuracy tensor via the broadcast table, then
     derives the feasibility masks and gathers the recourse slab.  Kept for
     the while_loop oracle and the ``ccg_encode`` parity tests; the serving
     hot path uses :func:`_encode_tasks_fused` (bit-identical, table-free).
+    ``tier_ok``: optional (..., 2) per-tier availability — outaged tiers'
+    options drop to -BIG accuracy (infeasible, out of any fallback argmax).
     Returns ``(f_flat, feas_f, fs_ok, rec_all)`` with shapes
     ((M, F, K), (M, F, K), (M, F), (M, P, F)).
     """
     lat = prob.lat
     sys = lat.sys
     # C1 protected with the robust accuracy margin (h in the Benders cuts)
-    f_flat, feas_f = lat.feasible_flat(difficulty, acc_req, sys.acc_margin_robust)
+    f_flat, feas_f = lat.feasible_flat(difficulty, acc_req,
+                                       sys.acc_margin_robust, tier_ok=tier_ok)
     pow2 = 2 ** jnp.arange(sys.num_versions)
     code = (feas_f * pow2[None, None]).sum(axis=-1)   # (M, F) subset codes
     rec_all = jnp.take_along_axis(
@@ -133,7 +136,7 @@ def _encode_tasks(prob: RobustProblem, difficulty, acc_req):
 
 
 def _encode_tasks_fused(prob: RobustProblem, difficulty, acc_req,
-                        force: str = "auto"):
+                        force: str = "auto", tier_ok=None):
     """Table-free per-task CCG inputs via the fused ``ccg_encode`` kernel.
 
     No (M, N, Z, K, 2) or (M, F, K) accuracy tensor is built anywhere:
@@ -141,15 +144,17 @@ def _encode_tasks_fused(prob: RobustProblem, difficulty, acc_req,
     flat layout, emit the (M, F) feasible-version bitmask ``code``, the
     (M, P, F) recourse slab, and the flat accuracy argmax ``best`` consumed
     by the all-infeasible fallback.  Bit-identical to :func:`_encode_tasks`
-    (parity-tested in tests/test_kernels.py).
+    (parity-tested in tests/test_kernels.py).  ``tier_ok``: optional (2,)
+    per-tier availability, lowered to the kernel's (F,) ``y_ok`` mask.
     """
     lat = prob.lat
+    y_ok = None if tier_ok is None else lat.tier_y_ok(tier_ok)
     return ccg_encode(
         jnp.asarray(difficulty, jnp.float32), jnp.asarray(acc_req, jnp.float32),
         lat.rn_flat, lat.pn_flat, lat.tier_flat,
         prob.b2_scaled, prob.rec_table,
         margin=lat.sys.acc_margin_robust, num_versions=lat.sys.num_versions,
-        force=force,
+        force=force, y_ok=y_ok,
     )
 
 
@@ -181,7 +186,8 @@ def _finish_solution(prob: RobustProblem, code, best, rec_all, y_f):
 
 @partial(jax.jit, static_argnames=("max_iters", "force"))
 def solve_ccg(prob: RobustProblem, difficulty, acc_req, max_iters: int = 8,
-              theta: float = 1e-4, warm_y=None, force: str = "auto"):
+              theta: float = 1e-4, warm_y=None, force: str = "auto",
+              tier_ok=None):
     """Alg. 2 for a batch of tasks — fixed-unroll masked iteration.
 
     difficulty: (M,) content difficulty z; acc_req: (M,) A^q_i.
@@ -214,11 +220,14 @@ def solve_ccg(prob: RobustProblem, difficulty, acc_req, max_iters: int = 8,
     worst-case pole of its warm start and O_up starts at that configuration's
     robust cost — a valid upper bound whenever the warm start is feasible —
     so typical tasks converge in fewer CCG iterations.
+
+    ``tier_ok``: optional (2,) per-tier availability; outaged tiers' options
+    become infeasible and drop out of the all-infeasible fallback.
     """
     lat = prob.lat
     c1 = lat.c1_flat                                  # (F,)
     code, rec_all, best = _encode_tasks_fused(prob, difficulty, acc_req,
-                                              force=force)
+                                              force=force, tier_ok=tier_ok)
     fs_ok = code > 0                                  # (M, F)
     m = code.shape[0]
     n_poles = prob.poles.shape[0]
@@ -301,7 +310,7 @@ def solve_ccg(prob: RobustProblem, difficulty, acc_req, max_iters: int = 8,
 @partial(jax.jit, static_argnames=("max_iters", "theta", "force"))
 def solve_ccg_fused(prob: RobustProblem, difficulty, acc_req,
                     max_iters: int = 8, theta: float = 1e-4, warm_y=None,
-                    force: str = "auto"):
+                    force: str = "auto", tier_ok=None):
     """Alg. 2 as ONE fused solve — the serving hot path since PR 6.
 
     Same contract as :func:`solve_ccg` (decisions, bounds, and iteration
@@ -317,16 +326,20 @@ def solve_ccg_fused(prob: RobustProblem, difficulty, acc_req,
 
     ``solve_ccg`` and ``solve_ccg_while`` are retained as the bit-exact
     oracles (and for the slab-master Pallas path's parity tests).
+
+    ``tier_ok``: optional (2,) per-tier availability; outaged tiers' options
+    become infeasible and drop out of the all-infeasible fallback.
     """
     lat = prob.lat
     if warm_y is None:
         warm_y = -jnp.ones(jnp.asarray(difficulty).shape[0], jnp.int32)
+    y_ok = None if tier_ok is None else lat.tier_y_ok(tier_ok)
     y_f, v_star, o_up, o_down, iters, none_ok = ccg_solve(
         jnp.asarray(difficulty, jnp.float32), jnp.asarray(acc_req, jnp.float32),
         lat.rn_flat, lat.pn_flat, lat.tier_flat, lat.b2_flat,
         prob.poles * lat.u_dev, lat.c1_flat, warm_y.astype(jnp.int32),
         margin=lat.sys.acc_margin_robust, num_versions=lat.sys.num_versions,
-        max_iters=max_iters, theta=theta, force=force)
+        max_iters=max_iters, theta=theta, force=force, y_ok=y_ok)
     route, r_idx, p_idx = lat.unflatten_index(y_f)
     return {
         "route": route, "r": r_idx, "p": p_idx, "v": v_star,
@@ -336,14 +349,15 @@ def solve_ccg_fused(prob: RobustProblem, difficulty, acc_req,
 
 @partial(jax.jit, static_argnames=("max_iters",))
 def solve_ccg_while(prob: RobustProblem, difficulty, acc_req, max_iters: int = 8,
-                    theta: float = 1e-4, warm_y=None):
+                    theta: float = 1e-4, warm_y=None, tier_ok=None):
     """Original per-task ``lax.while_loop`` CCG — the unrolled solver's
     decision-identity oracle (kept out of the serving hot path)."""
     lat = prob.lat
     sys = lat.sys
     c1 = lat.c1_flat                                  # (F,)
     b2 = lat.b2_flat                                  # (F, K)
-    f_flat, feas_f, _, rec_all_m = _encode_tasks(prob, difficulty, acc_req)
+    f_flat, feas_f, _, rec_all_m = _encode_tasks(prob, difficulty, acc_req,
+                                                 tier_ok=tier_ok)
     if warm_y is None:
         warm_y = -jnp.ones(feas_f.shape[0], jnp.int32)
 
@@ -455,12 +469,13 @@ def solve_ccg_sharded(prob: RobustProblem, difficulty, acc_req, mesh,
     return {k: v[:m] for k, v in sol.items()}
 
 
-def exact_oracle(prob: RobustProblem, difficulty, acc_req):
+def exact_oracle(prob: RobustProblem, difficulty, acc_req, tier_ok=None):
     """Brute force min_y max_{u∈poles} min_v — test oracle."""
     lat = prob.lat
     c1 = lat.c1_flat
     b2 = lat.b2_flat
-    _, feas_f = lat.feasible_flat(difficulty, acc_req, lat.sys.acc_margin_robust)
+    _, feas_f = lat.feasible_flat(difficulty, acc_req,
+                                  lat.sys.acc_margin_robust, tier_ok=tier_ok)
 
     def per_task(feas_i):
         u = prob.poles[:, None, :] * prob.u_dev        # (P, 1, K)

@@ -71,17 +71,31 @@ def apply_temporal_consistency(route, prev_route, taus, prev_tau, rcfg: RouterCo
     return jnp.where(flip & ~allowed & (prev_route >= 0), prev_route, route)
 
 
+def clamp_route_available(route, tier_ok):
+    """Force routes off outaged tiers.  ``tier_ok``: (..., 2) availability
+    (0 = edge, 1 = cloud; <= 0 means down).  Availability overrides every
+    other constraint — including temporal consistency — so this runs LAST:
+    a stream pinned to a dead tier by its history must still move."""
+    route = jnp.where(tier_ok[..., 1] > 0, route, jnp.zeros_like(route))
+    route = jnp.where(tier_ok[..., 0] > 0, route, jnp.ones_like(route))
+    return route
+
+
 # ---------------------------------------------------------------------------
 # Stage 1: adaptive edge-cloud configuration (Alg. 1)
 # ---------------------------------------------------------------------------
 def stage1_configure(sys_or_lat, taus, difficulty, acc_req, prev_route, prev_tau,
-                     rcfg: RouterConfig = RouterConfig()):
+                     rcfg: RouterConfig = RouterConfig(), tier_ok=None):
     """Vectorized Alg. 1.  All inputs (M,).  Returns route, r_idx warm starts.
 
     Table-free: the only accuracy values Alg. 1 consults are f_i(r, v1) on
     edge at max fps, so the shared formula is evaluated directly on that
     (M, N) slice (bitwise identical to slicing the broadcast table, which
     this path historically built and threw 99.6% of away).
+
+    ``tier_ok``: optional (2,) tier availability — an outaged tier is never
+    selected (the clamp runs after temporal consistency: survivors re-route
+    even when their history would pin them to the dead tier).
     """
     sys = sys_or_lat.sys if isinstance(sys_or_lat, DecisionLattice) else sys_or_lat
     # f_i(r, v1) at the max fps, edge tier (Alg.1 line 3: guided by τ)
@@ -94,6 +108,8 @@ def stage1_configure(sys_or_lat, taus, difficulty, acc_req, prev_route, prev_tau
     # Alg.1 line 8: escalate to cloud while infeasible on edge
     route = jnp.where(any_ok, (taus > rcfg.tau_cloud).astype(jnp.int32), 1)
     route = apply_temporal_consistency(route, prev_route, taus, prev_tau, rcfg)
+    if tier_ok is not None:
+        route = clamp_route_available(route, tier_ok)
     return route, r_idx
 
 
@@ -209,6 +225,7 @@ def _two_stage_select(
     prev_tau,             # (M,)
     rcfg: RouterConfig,
     force: str = "auto",
+    tier_ok=None,
 ):
     """Shared Stage-1 → warm-started CCG → temporal-consistency core.
 
@@ -216,19 +233,28 @@ def _two_stage_select(
     ``route`` run exactly this selection once the gate scores are in hand,
     so routing decisions are identical by construction between the two entry
     points.  Returns the pre-C6 solution with tau / warm diagnostics.
+
+    ``tier_ok``: optional (2,) tier availability.  Outaged tiers are
+    infeasible inside the CCG (masked encode) and clamped away after the
+    temporal-consistency override — availability beats history.
     """
     lat = prob.lat
     warm_route, warm_r = stage1_configure(
-        lat, taus, difficulty, acc_req, prev_route, prev_tau, rcfg
+        lat, taus, difficulty, acc_req, prev_route, prev_tau, rcfg,
+        tier_ok=tier_ok
     )
     # Stage-1 picks (route, r) at max fps — seed CCG with that configuration
     warm_y = lat.flatten_index(warm_route, warm_r, lat.sys.n_fps - 1)
     sol = solve_ccg_fused(prob, difficulty, acc_req,
-                          warm_y=warm_y.astype(jnp.int32), force=force)
+                          warm_y=warm_y.astype(jnp.int32), force=force,
+                          tier_ok=tier_ok)
     # Stage-1 consistency overrides Stage-2 route flips that the gate forbids
-    sol = dict(sol, route=apply_temporal_consistency(
+    route = apply_temporal_consistency(
         sol["route"], prev_route, taus, prev_tau, rcfg
-    ))
+    )
+    if tier_ok is not None:
+        route = clamp_route_available(route, tier_ok)
+    sol = dict(sol, route=route)
     sol["tau"] = taus
     sol["warm_route"] = warm_route
     sol["warm_r"] = warm_r
@@ -245,6 +271,7 @@ def route_segment(
     acc_req,              # (M,)
     rcfg: RouterConfig = RouterConfig(),
     force: str = "auto",
+    tier_ok=None,
 ):
     """Per-stream portion of the streaming step: gate → Stage-1 → CCG →
     temporal consistency.  Everything here is embarrassingly parallel over
@@ -258,7 +285,7 @@ def route_segment(
     )
     sol = _two_stage_select(
         prob, taus, difficulty, acc_req, state.prev_route, state.prev_tau,
-        rcfg, force=force
+        rcfg, force=force, tier_ok=tier_ok
     )
     return new_gate, taus, sol
 
@@ -275,6 +302,7 @@ def route_step(
     acc_req,              # (M,)
     rcfg: RouterConfig = RouterConfig(),
     force: str = "auto",
+    tier_ok=None,
 ):
     """One fully jit-compiled streaming step: (state, segment batch) -> (state, sol).
 
@@ -291,7 +319,7 @@ def route_step(
     lat = prob.lat
     new_gate, taus, sol = route_segment(
         prob, gate_cfg, gate_params, state, dx, difficulty, acc_req, rcfg,
-        force=force
+        force=force, tier_ok=tier_ok
     )
     sol, bw_hist = enforce_bandwidth(lat, sol, difficulty, acc_req,
                                      rounds=rcfg.repair_rounds, force=force)
@@ -402,6 +430,7 @@ def route(
     prev_tau=None,
     rcfg: RouterConfig = RouterConfig(),
     force: str = "auto",
+    tier_ok=None,
 ):
     """Windowed stateless routing, jit-compiled end to end.
 
@@ -423,7 +452,7 @@ def route(
 
     sol = _two_stage_select(
         prob, taus, difficulty, acc_req, prev_route, prev_tau, rcfg,
-        force=force
+        force=force, tier_ok=tier_ok
     )
     sol, bw_hist = enforce_bandwidth(prob.lat, sol, difficulty, acc_req,
                                      rounds=rcfg.repair_rounds, force=force)

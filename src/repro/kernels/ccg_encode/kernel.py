@@ -33,7 +33,7 @@ from repro.kernels.ccg_master.ref import BIG
 _INT_MAX = jnp.iinfo(jnp.int32).max
 
 
-def _encode_kernel(z_ref, aq_ref, rn_ref, pn_ref, tf_ref, b2s_ref,
+def _encode_kernel(z_ref, aq_ref, rn_ref, pn_ref, tf_ref, ok_ref, b2s_ref,
                    code_ref, rec_ref, best_ref, *, margin, num_versions):
     bm = z_ref.shape[0]
     f = rn_ref.shape[0]
@@ -44,6 +44,7 @@ def _encode_kernel(z_ref, aq_ref, rn_ref, pn_ref, tf_ref, b2s_ref,
     rn = rn_ref[...][None, :]                            # (1, F)
     pn = pn_ref[...][None, :]
     tf = tf_ref[...][None, :]
+    ok = ok_ref[...][None, :] > 0                        # (1, F) availability
     fidx = jax.lax.broadcasted_iota(jnp.int32, (bm, f), 1)
 
     code = jnp.zeros((bm, f), jnp.int32)
@@ -52,6 +53,7 @@ def _encode_kernel(z_ref, aq_ref, rn_ref, pn_ref, tf_ref, b2s_ref,
     best = jnp.zeros((bm,), jnp.int32)
     for k in range(num_versions):
         f_k = _accuracy_formula(z, rn, pn, jnp.float32(k), tf)   # (bm, F)
+        f_k = jnp.where(ok, f_k, -BIG)
         feas = f_k >= thr
         code = code + jnp.where(feas, jnp.int32(1 << k), 0)
         rec = jnp.where(feas[:, None, :],
@@ -69,10 +71,11 @@ def _encode_kernel(z_ref, aq_ref, rn_ref, pn_ref, tf_ref, b2s_ref,
     best_ref[...] = best
 
 
-def ccg_encode(z, aq, rn_flat, pn_flat, tier_flat, b2_scaled, *,
+def ccg_encode(z, aq, rn_flat, pn_flat, tier_flat, y_ok, b2_scaled, *,
                margin: float, num_versions: int, block_m: int = 128,
                interpret: bool = False):
-    """z/aq: (M,); rn/pn/tier_flat: (F,); b2_scaled: (K, P, F) pole-scaled
+    """z/aq: (M,); rn/pn/tier_flat/y_ok: (F,) — y_ok is the availability
+    mask (all-ones when no outage); b2_scaled: (K, P, F) pole-scaled
     second-stage costs -> (code (M, F) int32, rec_all (M, P, F) float32,
     best (M,) int32).  M must divide block_m (the ops wrapper pads)."""
     m = z.shape[0]
@@ -91,6 +94,7 @@ def ccg_encode(z, aq, rn_flat, pn_flat, tier_flat, b2_scaled, *,
             pl.BlockSpec((f,), lambda mi: (0,)),
             pl.BlockSpec((f,), lambda mi: (0,)),
             pl.BlockSpec((f,), lambda mi: (0,)),
+            pl.BlockSpec((f,), lambda mi: (0,)),
             pl.BlockSpec((k, p, f), lambda mi: (0, 0, 0)),
         ],
         out_specs=[
@@ -104,4 +108,4 @@ def ccg_encode(z, aq, rn_flat, pn_flat, tier_flat, b2_scaled, *,
             jax.ShapeDtypeStruct((m,), jnp.int32),
         ],
         interpret=interpret,
-    )(z, aq, rn_flat, pn_flat, tier_flat, b2_scaled)
+    )(z, aq, rn_flat, pn_flat, tier_flat, y_ok, b2_scaled)

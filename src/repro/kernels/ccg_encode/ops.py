@@ -17,14 +17,16 @@ def _on_tpu() -> bool:
 @partial(jax.jit, static_argnames=("margin", "num_versions", "block_m", "force"))
 def ccg_encode(z, aq, rn_flat, pn_flat, tier_flat, b2_scaled, rec_table, *,
                margin: float, num_versions: int, block_m: int = 128,
-               force: str = "auto"):
+               force: str = "auto", y_ok=None):
     """Fused per-task CCG encoding -> (code, rec_all, best).
 
     z/aq: (M,) task difficulty and accuracy requirement; rn/pn/tier_flat:
     (F,) normalized option coordinates; b2_scaled: (P, F, K) pole-scaled
     second-stage costs (the kernel's VMEM-resident recourse source);
     rec_table: (P, F, 2^K) subset-min lookup (the ref's gather source — the
-    two encode the same recourse values, see kernel.py).  Returns the
+    two encode the same recourse values, see kernel.py).  ``y_ok`` is an
+    optional (F,) availability mask: options at ``y_ok <= 0`` become
+    infeasible and lose the fallback argmax (scenario outages).  Returns the
     (M, F) int32 feasible-version bitmask, the (M, P, F) recourse slab, and
     the (M,) flat accuracy argmax used by the all-infeasible fallback.
 
@@ -34,19 +36,21 @@ def ccg_encode(z, aq, rn_flat, pn_flat, tier_flat, b2_scaled, rec_table, *,
     """
     if force == "ref" or (force == "auto" and not _on_tpu()):
         return _ref(z, aq, rn_flat, pn_flat, tier_flat, rec_table,
-                    margin, num_versions)
+                    margin, num_versions, y_ok=y_ok)
     m = z.shape[0]
     bm = min(block_m, m)
     pad_m = (-m) % bm
     if pad_m:
         z = jnp.pad(z, (0, pad_m))
         aq = jnp.pad(aq, (0, pad_m))
+    ok = (jnp.ones_like(rn_flat) if y_ok is None else jnp.asarray(y_ok))
     code, rec_all, best = _pallas(
         z.astype(jnp.float32),
         aq.astype(jnp.float32),
         rn_flat.astype(jnp.float32),
         pn_flat.astype(jnp.float32),
         tier_flat.astype(jnp.float32),
+        ok.astype(jnp.float32),
         jnp.moveaxis(b2_scaled, -1, 0).astype(jnp.float32),   # (K, P, F)
         margin=margin, num_versions=num_versions, block_m=bm,
         interpret=not _on_tpu(),

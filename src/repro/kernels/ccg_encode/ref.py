@@ -23,12 +23,16 @@ from repro.kernels.ccg_master.ref import BIG  # shared infeasibility sentinel
 
 
 def ccg_encode_ref(z, aq, rn_flat, pn_flat, tier_flat, rec_table, margin,
-                   num_versions: int):
+                   num_versions: int, y_ok=None):
     """Fused task encoding for a CCG batch.
 
     z/aq: (M,) difficulty and accuracy requirement; rn/pn/tier_flat: (F,)
     normalized accuracy-formula coordinates of every flat option;
-    rec_table: (P, F, 2^K) recourse lookup; margin: robust accuracy margin.
+    rec_table: (P, F, 2^K) recourse lookup; margin: robust accuracy margin;
+    y_ok: optional (F,) availability mask — options with ``y_ok <= 0`` are
+    outaged: their accuracy is clamped to -BIG so they fail the feasibility
+    threshold AND lose the fallback argmax, which keeps the all-infeasible
+    fallback on a surviving server.
 
     Returns ``(code, rec_all, best)``:
       code    : (M, F) int32 feasible-version bitmask (bit k set iff version
@@ -44,12 +48,15 @@ def ccg_encode_ref(z, aq, rn_flat, pn_flat, tier_flat, rec_table, margin,
     pn = pn_flat[None, :]
     tf = tier_flat[None, :]
     m = z2.shape[0]
+    okm = None if y_ok is None else (jnp.asarray(y_ok) > 0)[None, :]
 
     code = jnp.zeros((m, rn_flat.shape[0]), jnp.int32)
     best_val = jnp.full((m,), -BIG, jnp.float32)
     best = jnp.zeros((m,), jnp.int32)
     for k in range(num_versions):
         f_k = _accuracy_formula(z2, rn, pn, jnp.float32(k), tf)  # (M, F)
+        if okm is not None:
+            f_k = jnp.where(okm, f_k, -BIG)
         code = code + jnp.where(f_k >= thr, jnp.int32(1 << k), 0)
         # running flat argmax (index y·K + k): per-k first max over F, then
         # strict->/tie-to-lower-index hand-off across k — matches

@@ -35,9 +35,9 @@ from repro.kernels.ccg_master.ref import BIG
 _INT_MAX = jnp.iinfo(jnp.int32).max
 
 
-def _solve_kernel(z_ref, aq_ref, wy_ref, rn_ref, pn_ref, tf_ref, b2k_ref,
-                  u_ref, c1_ref, y_ref, v_ref, oup_ref, odn_ref, it_ref,
-                  inf_ref, *, margin, num_versions, n_steps, theta):
+def _solve_kernel(z_ref, aq_ref, wy_ref, rn_ref, pn_ref, tf_ref, ok_ref,
+                  b2k_ref, u_ref, c1_ref, y_ref, v_ref, oup_ref, odn_ref,
+                  it_ref, inf_ref, *, margin, num_versions, n_steps, theta):
     bm = z_ref.shape[0]
     f = rn_ref.shape[0]
     k_n = num_versions
@@ -48,6 +48,7 @@ def _solve_kernel(z_ref, aq_ref, wy_ref, rn_ref, pn_ref, tf_ref, b2k_ref,
     rn = rn_ref[...][None, :]                             # (1, F)
     pn = pn_ref[...][None, :]
     tf = tf_ref[...][None, :]
+    ok = ok_ref[...][None, :] > 0                         # (1, F) availability
     c1 = c1_ref[...]                                      # (F,)
     opu = 1.0 + u_ref[...]                                # (P, K)
     fidx = jax.lax.broadcasted_iota(jnp.int32, (bm, f), 1)
@@ -67,6 +68,7 @@ def _solve_kernel(z_ref, aq_ref, wy_ref, rn_ref, pn_ref, tf_ref, b2k_ref,
     bk = jnp.zeros((bm, f), jnp.int32)
     for k in range(k_n):
         f_k = _accuracy_formula(z, rn, pn, jnp.float32(k), tf)    # (bm, F)
+        f_k = jnp.where(ok, f_k, -BIG)
         code = code | jnp.where(f_k >= thr, jnp.int32(1 << k), 0)
         if k == 0:
             bv = f_k
@@ -163,11 +165,12 @@ def _solve_kernel(z_ref, aq_ref, wy_ref, rn_ref, pn_ref, tf_ref, b2k_ref,
     inf_ref[...] = none_ok.astype(jnp.int32)
 
 
-def ccg_solve(z, aq, warm_y, rn_flat, pn_flat, tier_flat, b2k, u_all, c1_flat,
-              *, margin: float, num_versions: int, max_iters: int = 8,
+def ccg_solve(z, aq, warm_y, rn_flat, pn_flat, tier_flat, y_ok, b2k, u_all,
+              c1_flat, *, margin: float, num_versions: int, max_iters: int = 8,
               theta: float = 1e-4, block_m: int = 128,
               interpret: bool = False):
-    """z/aq: (M,); warm_y: (M,) int32; rn/pn/tier_flat, c1_flat: (F,);
+    """z/aq: (M,); warm_y: (M,) int32; rn/pn/tier_flat, c1_flat, y_ok: (F,)
+    — y_ok is the availability mask (all-ones when no outage);
     b2k: (K, F) transposed second-stage costs; u_all: (P, K) pole deviations
     -> (y_f, v_star, o_up, o_down, iters, infeasible(int32)), all (M,).
     M must divide block_m (the ops wrapper pads)."""
@@ -187,7 +190,7 @@ def ccg_solve(z, aq, warm_y, rn_flat, pn_flat, tier_flat, b2k, u_all, c1_flat,
         grid=grid,
         in_specs=[
             lane(), lane(), lane(),
-            vec_f(), vec_f(), vec_f(),
+            vec_f(), vec_f(), vec_f(), vec_f(),
             pl.BlockSpec((k, f), lambda mi: (0, 0)),
             pl.BlockSpec((p, k), lambda mi: (0, 0)),
             vec_f(),
@@ -202,4 +205,4 @@ def ccg_solve(z, aq, warm_y, rn_flat, pn_flat, tier_flat, b2k, u_all, c1_flat,
             jax.ShapeDtypeStruct((m,), jnp.int32),
         ],
         interpret=interpret,
-    )(z, aq, warm_y, rn_flat, pn_flat, tier_flat, b2k, u_all, c1_flat)
+    )(z, aq, warm_y, rn_flat, pn_flat, tier_flat, y_ok, b2k, u_all, c1_flat)

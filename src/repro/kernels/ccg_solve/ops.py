@@ -18,13 +18,16 @@ def _on_tpu() -> bool:
                                    "theta", "block_m", "force"))
 def ccg_solve(z, aq, rn_flat, pn_flat, tier_flat, b2_flat, u_all, c1_flat,
               warm_y, *, margin: float, num_versions: int, max_iters: int = 8,
-              theta: float = 1e-4, block_m: int = 128, force: str = "auto"):
+              theta: float = 1e-4, block_m: int = 128, force: str = "auto",
+              y_ok=None):
     """Fully fused CCG solve -> (y_f, v_star, o_up, o_down, iters, infeasible).
 
     z/aq: (M,) task difficulty and accuracy requirement; rn/pn/tier_flat:
     (F,) normalized option coordinates; b2_flat: (F, K) second-stage costs;
     u_all: (P, K) pole deviations; c1_flat: (F,) first-stage costs; warm_y:
-    (M,) int32 flat warm starts (-1 = cold).  Runs encode -> master argmin ->
+    (M,) int32 flat warm starts (-1 = cold); y_ok: optional (F,) availability
+    mask — options at ``y_ok <= 0`` become infeasible and lose the fallback
+    argmax (scenario outages).  Runs encode -> master argmin ->
     SP pole selection -> η update across all min(max_iters, P+1) CCG steps in
     one pass — no per-step dispatch, no (M, P, F) recourse slab.
 
@@ -35,7 +38,8 @@ def ccg_solve(z, aq, rn_flat, pn_flat, tier_flat, b2_flat, u_all, c1_flat,
     """
     if force == "ref" or (force == "auto" and not _on_tpu()):
         return _ref(z, aq, rn_flat, pn_flat, tier_flat, b2_flat, u_all,
-                    c1_flat, warm_y, margin, num_versions, max_iters, theta)
+                    c1_flat, warm_y, margin, num_versions, max_iters, theta,
+                    y_ok=y_ok)
     m = z.shape[0]
     bm = min(block_m, m)
     pad_m = (-m) % bm
@@ -43,11 +47,12 @@ def ccg_solve(z, aq, rn_flat, pn_flat, tier_flat, b2_flat, u_all, c1_flat,
         z = jnp.pad(z, (0, pad_m))
         aq = jnp.pad(aq, (0, pad_m))
         warm_y = jnp.pad(warm_y, (0, pad_m), constant_values=-1)
+    ok = (jnp.ones_like(rn_flat) if y_ok is None else jnp.asarray(y_ok))
     y_f, v_star, o_up, o_down, iters, infeas = _pallas(
         z.astype(jnp.float32), aq.astype(jnp.float32),
         warm_y.astype(jnp.int32),
         rn_flat.astype(jnp.float32), pn_flat.astype(jnp.float32),
-        tier_flat.astype(jnp.float32),
+        tier_flat.astype(jnp.float32), ok.astype(jnp.float32),
         jnp.moveaxis(b2_flat, -1, 0).astype(jnp.float32),    # (K, F)
         u_all.astype(jnp.float32), c1_flat.astype(jnp.float32),
         margin=margin, num_versions=num_versions, max_iters=max_iters,

@@ -43,14 +43,17 @@ from repro.kernels.ccg_master.ref import BIG  # shared infeasibility sentinel
 
 def ccg_solve_ref(z, aq, rn_flat, pn_flat, tier_flat, b2_flat, u_all, c1,
                   warm_y, margin, num_versions: int, max_iters: int,
-                  theta: float, unroll_head: int = 2):
+                  theta: float, unroll_head: int = 2, y_ok=None):
     """Fused CCG solve for a task batch.
 
     z/aq: (M,) difficulty and accuracy requirement; rn/pn/tier_flat: (F,)
     normalized option coordinates; b2_flat: (F, K) second-stage costs;
     u_all: (P, K) pole deviations (poles · ũ); c1: (F,) first-stage costs;
     warm_y: (M,) int32 flat warm starts (-1 = cold); margin: robust accuracy
-    margin; theta: CCG gap tolerance.
+    margin; theta: CCG gap tolerance; y_ok: optional (F,) availability mask —
+    options at ``y_ok <= 0`` are outaged: clamped to -BIG accuracy so they
+    drop out of feasibility AND the all-infeasible fallback argmax (the
+    fallback always lands on a surviving server).
 
     Returns ``(y_f, v_star, o_up, o_down, iters, infeasible)`` — the
     converged first-stage flat index and second-stage version (both with the
@@ -70,10 +73,13 @@ def ccg_solve_ref(z, aq, rn_flat, pn_flat, tier_flat, b2_flat, u_all, c1,
     z2 = jnp.asarray(z)[:, None]
     thr = (jnp.asarray(aq) + margin)[:, None]
     rn, pn, tf = rn_flat[None, :], pn_flat[None, :], tier_flat[None, :]
+    okm = None if y_ok is None else (jnp.asarray(y_ok) > 0)[None, :]
     code = jnp.zeros((m, F), jnp.int8)
     bv = bk = None
     for k in range(K):
         f_k = _accuracy_formula(z2, rn, pn, jnp.float32(k), tf)   # (M, F)
+        if okm is not None:
+            f_k = jnp.where(okm, f_k, -BIG)
         code = code | jnp.where(f_k >= thr, jnp.int8(1 << k), jnp.int8(0))
         # running argmax over the flat (F·K) space (k minor): track the best
         # value and its k per option, resolve the F argmax once at the end

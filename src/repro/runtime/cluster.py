@@ -29,20 +29,37 @@ class FailureInjector:
             raise NodeFailure(f"step {step}: {self.schedule[step]}")
 
 
-def elastic_remesh(n_devices: Optional[int] = None, *, min_model: int = 1):
+def elastic_remesh(n_devices: Optional[int] = None, *, min_model: int = 1,
+                   prefer: str = "model"):
     """Largest (data, model) mesh from the surviving devices.
 
-    Keeps the model axis as large as possible (TP degree is bounded by what
-    the weights were sharded for), puts the remainder on data.
+    ``prefer="model"`` (default, trainer recovery) keeps the model axis as
+    large as possible — TP degree is bounded by what the weights were
+    sharded for — and puts the remainder on data.  ``prefer="data"``
+    (serving recovery) puts every surviving device on the data axis: serve
+    streams shard along data only, so a survivor mesh of shape (n, 1) keeps
+    all of them routing.
     """
     devs = jax.devices()
     n = n_devices if n_devices is not None else len(devs)
+    if n <= 0:
+        raise ValueError(
+            f"elastic_remesh needs at least one surviving device, got "
+            f"n_devices={n_devices!r}")
+    if prefer not in ("model", "data"):
+        raise ValueError(f"prefer must be 'model' or 'data', got {prefer!r}")
     n = min(n, len(devs))
-    model = 1
-    for cand in (16, 8, 4, 2, 1):
-        if cand <= n and n % cand == 0 and cand >= min_model:
-            model = cand
-            break
+    if prefer == "data":
+        model = max(min_model, 1)
+        if n % model != 0:
+            raise ValueError(
+                f"{n} surviving devices not divisible by min_model={model}")
+    else:
+        model = 1
+        for cand in (16, 8, 4, 2, 1):
+            if cand <= n and n % cand == 0 and cand >= min_model:
+                model = cand
+                break
     data = n // model
     return jax.make_mesh((data, model), ("data", "model"), devices=devs[:n])
 

@@ -4,14 +4,24 @@ A segment is sent to the least-loaded server; if its latency estimate
 exceeds the hedge deadline (q-th percentile of recent completions), a backup
 copy is dispatched to the next pool and the first finisher wins — the
 standard tail-at-scale recipe, applied at the R2E-VID scheduler level.
+
+The jnp ports (``hedged_dispatch_jnp`` / ``p99_jnp``) are the jit- and
+scan-compatible forms fused into ``realize_rounds`` by the scenario engine;
+the numpy originals stay as the parity oracles.
 """
 from __future__ import annotations
 
+import jax.numpy as jnp
 import numpy as np
 
 
 def p99(samples):
     return float(np.percentile(np.asarray(samples), 99))
+
+
+def p99_jnp(samples):
+    """jnp port of :func:`p99` — traceable, returns a 0-d array."""
+    return jnp.quantile(jnp.asarray(samples, jnp.float32).ravel(), 0.99)
 
 
 def hedged_dispatch(latencies, *, hedge_quantile: float = 0.9, hedge_cost: float = 0.05,
@@ -30,3 +40,22 @@ def hedged_dispatch(latencies, *, hedge_quantile: float = 0.9, hedge_cost: float
     backup = lat[:, 1] + deadline + hedge_cost
     hedged = np.where(primary > deadline, np.minimum(primary, backup), primary)
     return hedged
+
+
+def hedged_dispatch_jnp(latencies, *, hedge_quantile: float = 0.9,
+                        hedge_cost: float = 0.05):
+    """jnp port of :func:`hedged_dispatch` (same semantics, same interpolated
+    quantile), traceable under ``jit``/``vmap``/``scan``.
+
+    latencies: (..., n_tasks, n_replicas); the hedge deadline is the
+    ``hedge_quantile``-th quantile of the primary draws along the task axis
+    (per leading batch element).  Single-replica pools return the primary
+    draws unchanged, exactly like the numpy oracle.
+    """
+    lat = jnp.asarray(latencies, jnp.float32)
+    primary = lat[..., 0]
+    if lat.shape[-1] < 2:
+        return primary
+    deadline = jnp.quantile(primary, hedge_quantile, axis=-1, keepdims=True)
+    backup = lat[..., 1] + deadline + hedge_cost
+    return jnp.where(primary > deadline, jnp.minimum(primary, backup), primary)

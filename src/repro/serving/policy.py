@@ -57,6 +57,7 @@ from repro.core.router import (
     RouterConfig,
     RouterState,
     apply_temporal_consistency,
+    clamp_route_available,
     enforce_bandwidth,
     init_router_state,
     route_segment,
@@ -68,7 +69,8 @@ from repro.core.router import (
 # ---------------------------------------------------------------------------
 @partial(
     jax.tree_util.register_dataclass,
-    data_fields=("z", "aq", "dx", "bw_mult", "u"),
+    data_fields=("z", "aq", "dx", "bw_mult", "u", "tier_ok", "avail",
+                 "lat_mult", "bw_scale"),
     meta_fields=(),
 )
 @dataclasses.dataclass(frozen=True)
@@ -81,12 +83,32 @@ class Observation:
     ignore it.  ``bw_mult`` / ``u`` are *realization* inputs consumed by the
     simulator after the decision; no policy reads the realized ``u`` (the
     paper's information model: methods see ẑ and A^q only).
+
+    The scenario-engine fields (all optional, ``None`` = benign round, the
+    pre-scenario program bit-for-bit):
+
+    * ``tier_ok`` (..., 2): per-tier availability the *router* sees —
+      health-check knowledge, not adversary state.  An outaged tier is
+      infeasible in Stage-1/CCG and clamped away post temporal consistency.
+    * ``avail`` (..., S): per-server availability the *realization* sees
+      (S = n_edge + n_cloud servers); dead servers take no queue load and
+      shrink their tier's uplink share.
+    * ``lat_mult`` (..., M, 2): heavy-tailed compute-latency multipliers
+      (primary, backup replica) applied at realization; hedged dispatch
+      races the backup when the primary blows the deadline quantile.
+    * ``bw_scale`` (...,): scenario scale on the C6 bandwidth budget —
+      scarcity the repair pass must plan against, distinct from the realized
+      ``bw_mult`` fluctuation.
     """
     z: jnp.ndarray                 # (..., M) content difficulty
     aq: jnp.ndarray                # (..., M) accuracy requirements A^q
     dx: Any = None                 # (..., M, d) motion features (gate input)
     bw_mult: Any = None            # (..., 2) per-tier bandwidth fluctuation
     u: Any = None                  # (..., K) realized compute deviation
+    tier_ok: Any = None            # (..., 2) per-tier availability (router)
+    avail: Any = None              # (..., S) per-server availability (realize)
+    lat_mult: Any = None           # (..., M, 2) hedged latency multipliers
+    bw_scale: Any = None           # (...,) C6 budget scale
 
     @property
     def n_streams(self) -> int:
@@ -103,11 +125,14 @@ class Observation:
 # identical to the host oracle bit for bit)
 # ---------------------------------------------------------------------------
 def _argmin_feasible_jnp(lat: DecisionLattice, z, aq, *, force_route=None,
-                         allowed_versions=None, margin=None):
+                         allowed_versions=None, margin=None, tier_ok=None):
     sys = lat.sys
     if margin is None:
         margin = sys.acc_margin_nominal
     f_flat = lat.accuracy_flat(z)                                  # (M, F, K)
+    if tier_ok is not None:
+        # outaged tiers: infeasible AND out of the max-accuracy fallback
+        f_flat = jnp.where(lat.tier_y_ok(tier_ok)[..., None] > 0, f_flat, -BIG)
     total = lat.c1_flat[None, :, None] + lat.b2_flat[None]
     feas = f_flat >= (aq + margin)[:, None, None]
     if force_route is not None:
@@ -152,14 +177,20 @@ class Policy:
         """Per-stream portion of the step — no cross-task reductions."""
         raise NotImplementedError
 
-    def repair(self, sol, z, aq):
-        """Cross-task tail on the full (gathered) batch; identity default."""
+    def repair(self, sol, z, aq, tier_ok=None, bw_scale=None):
+        """Cross-task tail on the full (gathered) batch; identity default.
+
+        ``tier_ok`` / ``bw_scale`` carry the scenario's capacity state so a
+        repair pass can plan against the *degraded* budget; policies without
+        a repair ignore them.
+        """
         return sol
 
     def decide(self, state, obs: Observation):
         """One full round: per-stream decision + cross-task repair."""
         state, sol = self.decide_stream(state, obs)
-        return state, self.repair(sol, obs.z, obs.aq)
+        return state, self.repair(sol, obs.z, obs.aq, tier_ok=obs.tier_ok,
+                                  bw_scale=obs.bw_scale)
 
     def pad_state(self, state, pad: int):
         """Grow every per-stream leaf by ``pad`` dummy streams (sharding)."""
@@ -191,7 +222,7 @@ class A2CloudOnlyPolicy(Policy):
 
     def decide_stream(self, state, obs):
         return state, _argmin_feasible_jnp(self._lat, obs.z, obs.aq,
-                                           force_route=1)
+                                           force_route=1, tier_ok=obs.tier_ok)
 
 
 @partial(jax.tree_util.register_dataclass,
@@ -214,13 +245,14 @@ class JCABPolicy(Policy):
         lat = self._lat
         z, aq = obs.z, obs.aq
         mid = lat.sys.num_versions // 2
-        cfg = _argmin_feasible_jnp(lat, z, aq, allowed_versions=[mid])
+        cfg = _argmin_feasible_jnp(lat, z, aq, allowed_versions=[mid],
+                                   tier_ok=obs.tier_ok)
         # the host oracle gathers the full accuracy table at the chosen
         # configs; the pointwise formula is bitwise the same check without
         # materializing the (M, N, Z, K, 2) table in the scan body
         ok = accuracy_at(lat.sys, z, cfg["r"], cfg["p"], cfg["v"],
                          cfg["route"]) >= aq
-        esc = _argmin_feasible_jnp(lat, z, aq)
+        esc = _argmin_feasible_jnp(lat, z, aq, tier_ok=obs.tier_ok)
         return state, {k: jnp.where(ok, cfg[k], esc[k]) for k in cfg}
 
 
@@ -251,7 +283,8 @@ class RDAPPolicy(Policy):
         z = obs.z
         # NOTE: plans against the *forecast*; reality realizes obs.z
         z_hat = jnp.where(state.has, self.ema * state.z_ema + (1 - self.ema) * z, z)
-        cfg = _argmin_feasible_jnp(self._lat, z_hat, obs.aq)
+        cfg = _argmin_feasible_jnp(self._lat, z_hat, obs.aq,
+                                   tier_ok=obs.tier_ok)
         new = RDAPState(z_ema=z.astype(jnp.float32),
                         has=jnp.ones_like(state.has))
         return new, cfg
@@ -297,7 +330,7 @@ class SniperPolicy(Policy):
         m = z.shape[0]
         n = self.n_profiles
         k = min(n, m)
-        fresh = _argmin_feasible_jnp(self._lat, z, aq)
+        fresh = _argmin_feasible_jnp(self._lat, z, aq, tier_ok=obs.tier_ok)
         key = jnp.stack([z, aq], axis=1)                       # (M, 2)
         # reuse most-similar profiled config (the similarity shortcut);
         # +inf keys on unfilled profile rows keep them unreachable
@@ -307,6 +340,9 @@ class SniperPolicy(Policy):
         reused = {f: jnp.where(far, fresh[f], getattr(state, f)[nn])
                   for f in ("route", "r", "p", "v")}
         sol = {f: jnp.where(state.has, reused[f], fresh[f]) for f in reused}
+        if obs.tier_ok is not None:
+            # a reused profile may point at a tier that has since died
+            sol["route"] = clamp_route_available(sol["route"], obs.tier_ok)
         # first-round capture: profile the first k tasks, then freeze
         cap = {f: getattr(state, f).at[:k].set(fresh[f][:k].astype(jnp.int32))
                for f in ("route", "r", "p", "v")}
@@ -420,18 +456,23 @@ class R2EVidPolicy(Policy):
             feas = fv >= aq[:, None]
             v = jnp.where(feas, cost_v[None], BIG).argmin(axis=1)
             v = jnp.where(feas.any(axis=1), v, fv.argmax(axis=1))
-            sol = {"route": jnp.zeros((m,), jnp.int32),
+            route = jnp.zeros((m,), jnp.int32)
+            if obs.tier_ok is not None:
+                route = clamp_route_available(route, obs.tier_ok)
+            sol = {"route": route,
                    "r": jnp.full((m,), fr, jnp.int32),
                    "p": jnp.full((m,), fp, jnp.int32), "v": v}
             return state, sol
         if not self.use_stage2:
             # adaptive config but single mid model, nominal planning
             return state, _argmin_feasible_jnp(
-                lat, z, aq, allowed_versions=[sys.num_versions // 2])
+                lat, z, aq, allowed_versions=[sys.num_versions // 2],
+                tier_ok=obs.tier_ok)
         if self.gate_params is not None:
             new_gate, taus, sol = route_segment(
                 self.prob, self.gate_cfg, self.gate_params, state,
-                obs.dx, z, aq, self.rcfg, force=self.force)
+                obs.dx, z, aq, self.rcfg, force=self.force,
+                tier_ok=obs.tier_ok)
             new_state = RouterState(
                 prev_route=sol["route"].astype(jnp.int32),
                 prev_tau=taus.astype(jnp.float32),
@@ -439,20 +480,40 @@ class R2EVidPolicy(Policy):
             )
             return new_state, sol
         # τ-proxy mode: cold CCG, difficulty as the gate-score proxy
-        sol = solve_ccg_fused(self.prob, z, aq, force=self.force)
+        sol = solve_ccg_fused(self.prob, z, aq, force=self.force,
+                              tier_ok=obs.tier_ok)
         if self.use_gate:
             taus = z
             route = apply_temporal_consistency(
                 sol["route"], state.prev_route, taus, state.prev_tau, self.rcfg)
+            if obs.tier_ok is not None:
+                route = clamp_route_available(route, obs.tier_ok)
             sol = dict(sol, route=route, tau=taus)
             state = HistoryState(prev_route=route.astype(jnp.int32),
                                  prev_tau=jnp.asarray(taus, jnp.float32))
         return state, sol
 
-    def repair(self, sol, z, aq):
+    def repair(self, sol, z, aq, tier_ok=None, bw_scale=None):
         if not self._full:
             return sol
+        sys = self.prob.lat.sys
+        # plan C6 against the scenario's *degraded* budget: the traced scale
+        # (collapse/recovery trace) times the surviving tiers' share of the
+        # nominal uplink capacity.  None scenario fields leave total_budget
+        # at None — the exact pre-scenario program.
+        total_budget = None
+        if bw_scale is not None:
+            # the scenario's capacity telemetry is the complete statement
+            total_budget = jnp.asarray(sys.total_bw_mbps, jnp.float32) * bw_scale
+        elif tier_ok is not None:
+            # fallback: derive the surviving capacity share from the
+            # binary tier availability alone
+            cap = sys.edge_bw_mbps + sys.cloud_bw_mbps
+            frac = (sys.edge_bw_mbps * (tier_ok[..., 0] > 0)
+                    + sys.cloud_bw_mbps * (tier_ok[..., 1] > 0)) / cap
+            total_budget = jnp.asarray(sys.total_bw_mbps, jnp.float32) * frac
         sol, bw_hist = enforce_bandwidth(self.prob.lat, sol, z, aq,
+                                         total_budget=total_budget,
                                          rounds=self.rcfg.repair_rounds,
                                          force=self.force)
         # route_step always exposed the repair's bandwidth trajectory;

@@ -1,0 +1,321 @@
+"""Scenario engine: compiled fault injection for serving runs (paper §4.3).
+
+A :class:`ScenarioTrace` compiles an adverse serving condition — tier
+outages, bandwidth collapse, heavy-tailed stragglers, adversarial compute
+deviations — into *per-round arrays* that ride on the round-stacked
+:class:`~repro.serving.policy.Observation`.  ``apply_scenario`` merges the
+trace into a sampled stream; the session then serves the whole degraded run
+inside its ONE ``lax.scan`` — no per-round Python, no special-cased drivers:
+
+  ``tier_ok``  (R, 2)     router-visible availability: outaged tiers become
+                          infeasible in Stage-1/CCG/C6 and are clamped away
+                          post temporal consistency
+  ``avail``    (R, S)     realization-visible per-server availability: dead
+                          servers take no LPT load, the tier uplink shrinks
+                          by the alive fraction
+  ``bw_mult``  (R, 2)     multiplicative bandwidth trace composed onto the
+                          stream's sampled fluctuation (collapse/recovery
+                          ramps, flash-crowd spikes)
+  ``bw_scale`` (R,)       the C6 budget scale the repair pass *plans*
+                          against — capacity knowledge, not adversary state
+  ``u``        (R, K)     realized compute-deviation schedule (adversarial
+                          rotation saturating the Γ budget)
+  ``lat_mult`` (R, M, 2)  heavy-tailed latency multipliers; with the
+                          session's static ``hedge=(quantile, cost)`` the
+                          realization races a backup replica per straggler
+
+Traces are compiled host-side with a seeded numpy rng (a scenario is data,
+not traced control flow), so a (name, shape, seed) triple is reproducible
+everywhere — the golden suite in ``benchmarks/scenario_suite.py`` pins it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cost_model import SystemConfig
+from repro.core.lattice import version_deviations
+from repro.serving.policy import Observation, make_policy
+from repro.serving.simulator import SimConfig, Simulator
+
+#: the named adverse suite (``none`` is the benign control)
+SUITE = ("edge_outage", "bw_collapse", "flash_crowd", "straggler_tail",
+         "adversarial_u")
+
+#: Pareto tail index for straggler latency draws (heavy: infinite variance)
+_PARETO_ALPHA = 1.5
+_LAT_CLIP = 20.0
+
+#: re-serve premium per SLA-violated segment: a missed requirement means the
+#: segment is served again at high fidelity (~2x the benign per-segment
+#: cost).  ``sla_cost = cost + SLA_PENALTY * sla_violation_rate`` is the
+#: suite's comparison metric — raw cost alone would reward under-provisioned
+#: baselines for shipping accuracy misses.
+SLA_PENALTY = 10.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioTrace:
+    """One compiled scenario: per-round fault arrays + hedge policy.
+
+    Every array field is optional; ``None`` means "benign along that axis"
+    and leaves the corresponding Observation field untouched, so the
+    ``none`` trace reproduces the pre-scenario program bit for bit.
+    ``onset`` is the first degraded round (None for always-on scenarios) —
+    the anchor for the recovery-rounds metric.
+    """
+    name: str
+    onset: Optional[int] = None
+    tier_ok: Any = None     # (R, 2)
+    avail: Any = None       # (R, S)
+    bw_mult: Any = None     # (R, 2) multiplier composed onto the stream's
+    bw_scale: Any = None    # (R,)
+    u: Any = None           # (R, K) replaces the stream's realized u
+    lat_mult: Any = None    # (R, M, 2)
+    hedge: Optional[tuple] = None   # static (quantile, cost)
+
+
+# ---------------------------------------------------------------------------
+# builders (host-side, seeded numpy)
+# ---------------------------------------------------------------------------
+def _none(r, m, n_edge, n_cloud, sys, rng):
+    return ScenarioTrace(name="none")
+
+
+def _cap_frac(sys, edge_frac, cloud_frac):
+    """Uplink capacity fraction given per-tier alive/throughput fractions —
+    the ``bw_scale`` telemetry a capacity-aware repair plans against."""
+    cap = sys.edge_bw_mbps + sys.cloud_bw_mbps
+    return (sys.edge_bw_mbps * edge_frac + sys.cloud_bw_mbps * cloud_frac) / cap
+
+
+def _edge_outage(r, m, n_edge, n_cloud, sys, rng):
+    """The edge tier dies at r0 = R//3; servers recover staggered, one
+    every other round.  The health gate (``tier_ok``) readmits the tier at
+    quorum (half the pool alive) — a tier at 1/4 capacity is not
+    schedulable, or the flood-back crushes the lone survivor.  ``bw_scale``
+    carries the alive-weighted capacity fraction (server counts are
+    observable telemetry) for the repair pass."""
+    r0 = max(1, r // 3)
+    avail = np.ones((r, n_edge + n_cloud), np.float32)
+    for i in range(n_edge):
+        rec = min(r, r0 + 2 + 2 * i)         # server i back at r0+2+2i
+        avail[r0:rec, i] = 0.0
+    alive_e = avail[:, :n_edge].mean(axis=1)
+    tier_ok = np.ones((r, 2), np.float32)
+    tier_ok[:, 0] = (alive_e >= 0.5).astype(np.float32)   # quorum gate
+    return ScenarioTrace(
+        name="edge_outage", onset=r0, tier_ok=tier_ok, avail=avail,
+        bw_scale=_cap_frac(sys, alive_e, 1.0).astype(np.float32))
+
+
+def _bw_collapse(r, m, n_edge, n_cloud, sys, rng):
+    """WAN congestion: the *cloud* uplink ramps down to a 0.15 floor, holds,
+    and ramps back (edge links are local and keep their rate).  ``bw_scale``
+    hands the capacity trace to the C6 repair so a capacity-aware policy
+    plans against the scarcity instead of discovering it."""
+    r0 = max(1, r // 3)
+    ramp = max(2, r // 8)
+    hold = max(2, r // 6)
+    floor = 0.15
+    trace = np.ones((r,), np.float32)
+    for i in range(ramp):                     # down-ramp
+        if r0 + i < r:
+            trace[r0 + i] = 1.0 - (1.0 - floor) * (i + 1) / ramp
+    lo, hi = min(r, r0 + ramp), min(r, r0 + ramp + hold)
+    trace[lo:hi] = floor
+    for i in range(ramp):                     # recovery ramp
+        t = r0 + ramp + hold + i
+        if t < r:
+            trace[t] = floor + (1.0 - floor) * (i + 1) / ramp
+    bw_mult = np.stack([np.ones((r,), np.float32), trace], axis=1)
+    return ScenarioTrace(
+        name="bw_collapse", onset=r0, bw_mult=bw_mult,
+        bw_scale=_cap_frac(sys, 1.0, trace).astype(np.float32))
+
+
+def _flash_crowd(r, m, n_edge, n_cloud, sys, rng):
+    """Short repeated contention spikes: three 2-round windows where cross
+    traffic takes ~65% of both uplinks.  Again mirrored into ``bw_scale``."""
+    trace = np.ones((r,), np.float32)
+    r0 = max(1, r // 4)
+    starts = sorted(rng.choice(np.arange(r0, max(r0 + 1, r - 2)),
+                               size=min(3, max(1, r - r0 - 2)),
+                               replace=False))
+    for s in starts:
+        trace[s:s + 2] = 0.35
+    bw_mult = np.repeat(trace[:, None], 2, axis=1)
+    return ScenarioTrace(name="flash_crowd", onset=int(starts[0]),
+                         bw_mult=bw_mult, bw_scale=trace.copy())
+
+
+def _straggler_tail(r, m, n_edge, n_cloud, sys, rng):
+    """Heavy-tailed (Pareto α=1.5) per-task compute latency multipliers on
+    the primary replica, an independent draw for the backup; realized with
+    hedged dispatch at the 0.9 deadline quantile."""
+    u = rng.uniform(size=(r, m, 2))
+    lat = np.clip((1.0 - u) ** (-1.0 / _PARETO_ALPHA), 1.0, _LAT_CLIP)
+    return ScenarioTrace(name="straggler_tail",
+                         lat_mult=lat.astype(np.float32),
+                         hedge=(0.9, 0.05))
+
+
+def _adversarial_u(r, m, n_edge, n_cloud, sys, rng):
+    """Realized compute deviation saturating the Γ budget every round, the
+    hit set rotating across versions — the schedule a nominal planner is
+    always wrong about somewhere."""
+    k = sys.num_versions
+    udev = np.asarray(version_deviations(sys))
+    u = np.zeros((r, k), np.float32)
+    for t in range(r):
+        hit = [(t + j) % k for j in range(sys.gamma)]
+        u[t, hit] = udev[hit]
+    return ScenarioTrace(name="adversarial_u", u=u)
+
+
+SCENARIOS = {
+    "none": _none,
+    "edge_outage": _edge_outage,
+    "bw_collapse": _bw_collapse,
+    "flash_crowd": _flash_crowd,
+    "straggler_tail": _straggler_tail,
+    "adversarial_u": _adversarial_u,
+}
+
+
+def compile_scenario(name: str, sys: SystemConfig, sim: SimConfig,
+                     n_rounds: int | None = None,
+                     seed: int = 0) -> ScenarioTrace:
+    """Compile a named scenario into per-round arrays for one run shape."""
+    if name not in SCENARIOS:
+        raise KeyError(f"unknown scenario {name!r}; "
+                       f"registered: {sorted(SCENARIOS)}")
+    rng = np.random.default_rng(seed)
+    r = n_rounds or sim.n_rounds
+    return SCENARIOS[name](r, sim.n_tasks, sim.n_edge_servers,
+                           sim.n_cloud_servers, sys, rng)
+
+
+def apply_scenario(stream: Observation, trace: ScenarioTrace) -> Observation:
+    """Merge a compiled trace into a round-stacked stream.
+
+    ``bw_mult`` composes multiplicatively with the stream's sampled
+    fluctuation; ``u`` replaces the sampled realization (the scenario IS the
+    adversary); availability / latency / budget fields attach directly.
+    The ``none`` trace returns the stream unchanged (same object).
+    """
+    kw = {}
+    if trace.bw_mult is not None:
+        tm = jnp.asarray(trace.bw_mult, jnp.float32)
+        kw["bw_mult"] = tm if stream.bw_mult is None else stream.bw_mult * tm
+    if trace.u is not None:
+        kw["u"] = jnp.asarray(trace.u, jnp.float32)
+    for fld in ("tier_ok", "avail", "lat_mult", "bw_scale"):
+        val = getattr(trace, fld)
+        if val is not None:
+            kw[fld] = jnp.asarray(val, jnp.float32)
+    if not kw:
+        return stream
+    return dataclasses.replace(stream, **kw)
+
+
+# ---------------------------------------------------------------------------
+# metrics + suite runner
+# ---------------------------------------------------------------------------
+def scenario_metrics(mets, stream: Observation,
+                     trace: ScenarioTrace) -> Dict[str, float]:
+    """Scalar robustness metrics from one degraded run's (R, M) outputs.
+
+    * ``cost`` / ``delay`` / ``accuracy``: run means (deterministic — no
+      observation noise, so goldens are exact).
+    * ``sla_violation_rate``: fraction of (round, task) realizations whose
+      deterministic accuracy missed the requirement.
+    * ``sla_cost``: ``cost + SLA_PENALTY * sla_violation_rate`` — the
+      comparison metric.  A violated segment is re-served at high fidelity
+      (the :data:`SLA_PENALTY` premium); raw cost alone would score an
+      under-provisioned policy as "cheap" for shipping accuracy misses.
+    * ``recovery_rounds``: rounds after ``trace.onset`` until the per-round
+      mean cost first returns within 1.1x of the pre-onset mean (R - onset
+      if it never does; 0 for always-on / benign scenarios).
+    """
+    cost_r = np.asarray(mets["cost"]).mean(axis=1)            # (R,)
+    acc = np.asarray(mets["accuracy"])
+    aq = np.asarray(stream.aq)
+    viol = float((acc < aq).mean())
+    out = {
+        "cost": float(cost_r.mean()),
+        "delay": float(np.asarray(mets["delay"]).mean()),
+        "accuracy": float(acc.mean()),
+        "sla_violation_rate": viol,
+        "sla_cost": float(cost_r.mean()) + SLA_PENALTY * viol,
+        "cloud_frac": float(np.asarray(mets["route"]).mean())
+        if "route" in mets else float("nan"),
+    }
+    r = cost_r.shape[0]
+    onset = trace.onset
+    if onset is None or onset <= 0 or onset >= r:
+        out["recovery_rounds"] = 0.0
+        return out
+    pre = cost_r[:onset].mean()
+    recovered = np.nonzero(cost_r[onset:] <= 1.1 * pre)[0]
+    out["recovery_rounds"] = float(recovered[0] if recovered.size
+                                   else r - onset)
+    return out
+
+
+def run_scenario(policy, scenario, *, streams: int = 64, rounds: int = 30,
+                 seed: int = 11, scenario_seed: int = 0,
+                 sys: SystemConfig | None = None, force: str | None = None,
+                 return_mets: bool = False):
+    """Serve one policy through one scenario: the canonical suite entry.
+
+    ``policy``: a registry name (``make_policy``) or a built Policy.
+    ``scenario``: a registry name or a pre-compiled :class:`ScenarioTrace`.
+    The whole degraded run executes as the session's single compiled scan;
+    returns :func:`scenario_metrics` (plus the raw (R, M) metrics when
+    ``return_mets``).
+    """
+    from repro.serving.session import ServeSession
+
+    sys = sys or SystemConfig()
+    simc = SimConfig(n_tasks=streams, n_rounds=rounds, seed=seed,
+                     bw_fluctuation=0.2)
+    simulator = Simulator(sys, simc)
+    stream = simulator.sample_stream(rounds)
+    trace = (scenario if isinstance(scenario, ScenarioTrace)
+             else compile_scenario(scenario, sys, simc, rounds,
+                                   seed=scenario_seed))
+    degraded = apply_scenario(stream, trace)
+    if isinstance(policy, str):
+        policy = make_policy(policy, sys)
+    session = ServeSession(policy, streams, sim=simc, hedge=trace.hedge,
+                           force=force)
+    mets = session.run(degraded)
+    scalars = scenario_metrics(mets, degraded, trace)
+    return (scalars, mets) if return_mets else scalars
+
+
+def run_suite(policies=None, scenarios=None, *, streams: int = 64,
+              rounds: int = 30, seed: int = 11, scenario_seed: int = 0,
+              sys: SystemConfig | None = None,
+              force: str | None = None) -> Dict[str, Dict[str, float]]:
+    """Every policy x every scenario -> ``{"policy@scenario": metrics}``.
+
+    The Table-2 generalization: robustness scalars per policy per adverse
+    condition, each cell one compiled serve run.  Defaults cover the full
+    registry against the full named suite.
+    """
+    from repro.serving.policy import POLICIES
+
+    policies = sorted(POLICIES) if policies is None else list(policies)
+    scenarios = list(SUITE) if scenarios is None else list(scenarios)
+    rows = {}
+    for s in scenarios:
+        for p in policies:
+            rows[f"{p}@{s}"] = run_scenario(
+                p, s, streams=streams, rounds=rounds, seed=seed,
+                scenario_seed=scenario_seed, sys=sys, force=force)
+    return rows

@@ -83,37 +83,43 @@ def _decide_scan(policy, state, obs_seq):
     return jax.lax.scan(body, state, obs_seq)
 
 
-@partial(jax.jit, static_argnames=("n_edge", "n_cloud"),
-         donate_argnames=("state",))
-def _serve_step(policy, state, obs, n_edge, n_cloud):
-    sys = policy.lat.sys
-    state, sol = policy.decide(state, obs)
-    met = realize_rounds(
+def _realize_obs(sys, obs, sol, n_edge, n_cloud, hedge):
+    """The one realization call every serve driver shares: scenario fault
+    inputs (per-server availability, hedged latency draws) ride on the
+    observation; ``None`` fields lower the exact pre-scenario program."""
+    return realize_rounds(
         sys, obs.z, obs.bw_mult, obs.u, sol["route"], sol["r"], sol["p"],
         sol["v"], n_edge=n_edge, n_cloud=n_cloud,
+        avail=obs.avail, lat_mult=obs.lat_mult, hedge=hedge,
     )
+
+
+@partial(jax.jit, static_argnames=("n_edge", "n_cloud", "hedge"),
+         donate_argnames=("state",))
+def _serve_step(policy, state, obs, n_edge, n_cloud, hedge=None):
+    sys = policy.lat.sys
+    state, sol = policy.decide(state, obs)
+    met = _realize_obs(sys, obs, sol, n_edge, n_cloud, hedge)
     return state, _round_output(sol, met)
 
 
-@partial(jax.jit, static_argnames=("n_edge", "n_cloud"),
+@partial(jax.jit, static_argnames=("n_edge", "n_cloud", "hedge"),
          donate_argnames=("state",))
-def _serve_run(policy, state, obs_seq, n_edge, n_cloud):
+def _serve_run(policy, state, obs_seq, n_edge, n_cloud, hedge=None):
     sys = policy.lat.sys
 
     def body(st, obs):
         st, sol = policy.decide(st, obs)
-        met = realize_rounds(
-            sys, obs.z, obs.bw_mult, obs.u, sol["route"], sol["r"], sol["p"],
-            sol["v"], n_edge=n_edge, n_cloud=n_cloud,
-        )
+        met = _realize_obs(sys, obs, sol, n_edge, n_cloud, hedge)
         return st, _round_output(sol, met)
 
     return jax.lax.scan(body, state, obs_seq)
 
 
-@partial(jax.jit, static_argnames=("ft", "n_edge", "n_cloud"),
+@partial(jax.jit, static_argnames=("ft", "n_edge", "n_cloud", "hedge"),
          donate_argnames=("carry",))
-def _serve_run_finetune(policy, carry, obs_seq, anchor, ft, n_edge, n_cloud):
+def _serve_run_finetune(policy, carry, obs_seq, anchor, ft, n_edge, n_cloud,
+                        hedge=None):
     """``_serve_run`` with the gate parameters threaded through the carry.
 
     carry = (policy state, gate params, round index).  Every
@@ -130,10 +136,7 @@ def _serve_run_finetune(policy, carry, obs_seq, anchor, ft, n_edge, n_cloud):
         st, params, i = c
         pol = dataclasses.replace(policy, gate_params=params)
         new_st, sol = pol.decide(st, obs)
-        met = realize_rounds(
-            sys, obs.z, obs.bw_mult, obs.u, sol["route"], sol["r"], sol["p"],
-            sol["v"], n_edge=n_edge, n_cloud=n_cloud,
-        )
+        met = _realize_obs(sys, obs, sol, n_edge, n_cloud, hedge)
         fail = (met["accuracy"] < obs.aq).astype(jnp.float32)   # SLA misses
 
         def loss_fn(p):
@@ -166,9 +169,9 @@ def _serve_run_finetune(policy, carry, obs_seq, anchor, ft, n_edge, n_cloud):
 
 
 @partial(jax.jit, static_argnames=("n_edge", "n_cloud", "mesh", "mesh_axis",
-                                   "has_dx"))
+                                   "has_dx", "hedge"))
 def _serve_run_sharded(policy, state, obs_seq, n_edge, n_cloud, mesh,
-                       mesh_axis, has_dx):
+                       mesh_axis, has_dx, hedge=None):
     """One compiled sharded scan over the whole run, for ANY shardable policy.
 
     The policy's per-stream stage (``decide_stream``) runs on each device's
@@ -197,13 +200,21 @@ def _serve_run_sharded(policy, state, obs_seq, n_edge, n_cloud, mesh,
         dx=pad_streams(obs_seq.dx) if has_dx else None,
         bw_mult=obs_seq.bw_mult,
         u=obs_seq.u,
+        # scenario fields stay replicated: tier_ok / bw_scale feed the
+        # per-stream decision and the gathered repair, avail / lat_mult only
+        # the real-M realization tail — none of them shard over streams
+        tier_ok=obs_seq.tier_ok,
+        avail=obs_seq.avail,
+        lat_mult=obs_seq.lat_mult,
+        bw_scale=obs_seq.bw_scale,
     )
     state = policy.pad_state(state, pad)
 
-    def shard_body(pol, st_l, dx_l, z_l, aq_l, bwm_seq, u_seq):
+    def shard_body(pol, st_l, dx_l, z_l, aq_l, bwm_seq, u_seq, scn_seq):
         def body(st, xs):
-            dx, z, aq, bwm, u = xs
-            obs_l = Observation(z=z, aq=aq, dx=dx)
+            dx, z, aq, bwm, u, scn = xs
+            tier_ok, avail, lat_mult, bw_scale = scn
+            obs_l = Observation(z=z, aq=aq, dx=dx, tier_ok=tier_ok)
             st, sol = pol.decide_stream(st, obs_l)
             # cross-task tail on the gathered REAL batch (padding dropped):
             # identical arithmetic to the dense path on every device
@@ -211,23 +222,27 @@ def _serve_run_sharded(policy, state, obs_seq, n_edge, n_cloud, mesh,
                 x, mesh_axis, axis=0, tiled=True)[:m]
             z_g, aq_g = gather(z), gather(aq)
             sol_g = {k: gather(v) for k, v in sol.items()}
-            sol_g = pol.repair(sol_g, z_g, aq_g)
-            met = realize_rounds(
-                pol.lat.sys, z_g, bwm, u, sol_g["route"], sol_g["r"],
-                sol_g["p"], sol_g["v"], n_edge=n_edge, n_cloud=n_cloud,
-            )
+            sol_g = pol.repair(sol_g, z_g, aq_g, tier_ok=tier_ok,
+                               bw_scale=bw_scale)
+            obs_g = Observation(z=z_g, aq=aq_g, bw_mult=bwm, u=u,
+                                avail=avail, lat_mult=lat_mult)
+            met = _realize_obs(pol.lat.sys, obs_g, sol_g, n_edge, n_cloud,
+                               hedge)
             return st, _round_output(sol_g, met)
 
-        return jax.lax.scan(body, st_l, (dx_l, z_l, aq_l, bwm_seq, u_seq))
+        return jax.lax.scan(
+            body, st_l, (dx_l, z_l, aq_l, bwm_seq, u_seq, scn_seq))
 
     dx_spec = P(None, mesh_axis) if has_dx else P()
+    scn_seq = (obs_seq.tier_ok, obs_seq.avail, obs_seq.lat_mult,
+               obs_seq.bw_scale)
     final_state, mets = shard_map(
         shard_body, mesh=mesh,
         in_specs=(P(), P(mesh_axis), dx_spec, P(None, mesh_axis),
-                  P(None, mesh_axis), P(), P()),
+                  P(None, mesh_axis), P(), P(), P()),
         out_specs=(P(mesh_axis), P()), check_vma=False,
     )(policy, state, obs_seq.dx, obs_seq.z, obs_seq.aq, obs_seq.bw_mult,
-      obs_seq.u)
+      obs_seq.u, scn_seq)
     final_state = jax.tree_util.tree_map(lambda x: x[:m], final_state)
     return final_state, mets
 
@@ -254,6 +269,12 @@ class ServeSession:
         Default mesh for ``run`` (``run_sharded`` takes an explicit one).
     finetune : FinetuneConfig, optional
         Enable the online gate fine-tuning carry (gate-mode r2evid only).
+    hedge : (quantile, cost) tuple, optional
+        Enable hedged dispatch inside the realization: a backup replica
+        fires at the ``quantile`` deadline of the primary latency draws and
+        the earlier finisher wins (+``cost`` dispatch overhead).  Only
+        meaningful when the stream carries ``lat_mult`` draws (scenario
+        engine); static — part of the compilation key.
     pools : dict, optional
         Tier -> :class:`~repro.serving.pools.ModelPool` live endpoints;
         ``dispatch`` maps a routed solution's token workloads onto them.
@@ -264,10 +285,17 @@ class ServeSession:
                  n_edge: int | None = None, n_cloud: int | None = None,
                  mesh=None, mesh_axis: str = "data",
                  finetune: FinetuneConfig | None = None,
+                 hedge: tuple | None = None,
                  force: str | None = None, pools=None, state=None):
         if force is not None and hasattr(policy, "force"):
             policy = dataclasses.replace(policy, force=force)
         sim = sim or SimConfig()
+        if hedge is not None:
+            hq, hc = hedge   # must be a static (quantile, cost) pair
+            hedge = (float(hq), float(hc))
+            if not 0.0 < hedge[0] < 1.0:
+                raise ValueError(f"hedge quantile must be in (0, 1), "
+                                 f"got {hedge[0]}")
         self.policy = policy
         self.n_streams = n_streams
         self.sim_cfg = sim
@@ -277,6 +305,7 @@ class ServeSession:
         self.mesh_axis = mesh_axis
         self.pools = pools
         self.finetune = finetune
+        self.hedge = hedge
         self.state = policy.init(n_streams) if state is None else state
         self._rounds_done = jnp.zeros((), jnp.int32)
         if finetune is not None:
@@ -356,7 +385,8 @@ class ServeSession:
         if obs.u is None or obs.bw_mult is None:
             return self.route(obs)
         self.state, out = _serve_step(
-            self.policy, self.state, obs, self.n_edge, self.n_cloud)
+            self.policy, self.state, obs, self.n_edge, self.n_cloud,
+            self.hedge)
         return out
 
     def run(self, stream: Observation, n_rounds: int | None = None,
@@ -385,11 +415,13 @@ class ServeSession:
             carry = (self.state, self.policy.gate_params, self._rounds_done)
             (self.state, params, self._rounds_done), mets = \
                 _serve_run_finetune(self.policy, carry, stream, self._anchor,
-                                    self.finetune, self.n_edge, self.n_cloud)
+                                    self.finetune, self.n_edge, self.n_cloud,
+                                    self.hedge)
             self.policy = dataclasses.replace(self.policy, gate_params=params)
             return mets
         self.state, mets = _serve_run(
-            self.policy, self.state, stream, self.n_edge, self.n_cloud)
+            self.policy, self.state, stream, self.n_edge, self.n_cloud,
+            self.hedge)
         return mets
 
     def run_sharded(self, mesh, stream: Observation,
@@ -415,8 +447,56 @@ class ServeSession:
             stream = jax.tree_util.tree_map(lambda x: x[:n_rounds], stream)
         self.state, mets = _serve_run_sharded(
             self.policy, self.state, stream, self.n_edge, self.n_cloud,
-            mesh, mesh_axis, stream.dx is not None)
+            mesh, mesh_axis, stream.dx is not None, self.hedge)
         return mets
+
+    def run_elastic(self, stream: Observation, failures: dict, *,
+                    mesh_axis: str = "data", n_nodes: int | None = None):
+        """Serve through mid-run device loss: one sharded scan per epoch.
+
+        ``failures``: {round -> iterable of node ids} killed *before* that
+        round.  The run is segmented at failure boundaries; at each boundary
+        the dead nodes are registered with a :class:`ClusterSim`,
+        ``elastic_remesh(alive, prefer="data")`` rebuilds the survivor mesh,
+        and the next segment continues under it with the carried stream
+        state — the serving analogue of the trainer's restore-on-remesh
+        recovery path.  Returns the per-round metrics concatenated across
+        segments (identical keys to :meth:`run`); the mesh history is kept
+        on ``self.mesh_history``.
+        """
+        import numpy as np
+
+        from repro.runtime.cluster import ClusterSim, elastic_remesh
+
+        self._check_obs(stream, rounds=True)
+        r_total = stream.z.shape[0]
+        cluster = ClusterSim(n_nodes or len(jax.devices()))
+        bounds = sorted(r for r in failures if 0 < r < r_total)
+        mesh = elastic_remesh(cluster.alive, prefer="data")
+        self.mesh_history = [(0, mesh)]
+        parts, start = [], 0
+        for b in bounds + [r_total]:
+            seg = jax.tree_util.tree_map(lambda x: x[start:b], stream)
+            # segment metrics land on that epoch's mesh — pull them to host
+            # so epochs served on different survivor sets concatenate
+            parts.append({k: np.asarray(v) for k, v in
+                          self.run_sharded(mesh, seg,
+                                           mesh_axis=mesh_axis).items()})
+            if b < r_total:
+                for node in failures[b]:
+                    cluster.kill(int(node))
+                if cluster.alive <= 0:
+                    raise RuntimeError(
+                        f"all {cluster.n_nodes} nodes dead at round {b}; "
+                        f"no survivor mesh to continue on")
+                mesh = elastic_remesh(cluster.alive, prefer="data")
+                self.mesh_history.append((b, mesh))
+                # re-shard the carried per-stream state onto the survivors
+                self.state = jax.tree_util.tree_map(
+                    lambda x: jnp.asarray(np.asarray(x)), self.state)
+            start = b
+        return {k: jnp.asarray(np.concatenate([p[k] for p in parts], axis=0))
+                for k in parts[0]}
 
     # -- live model pools ---------------------------------------------------
     def dispatch(self, sol, decode_tokens: int = 8):

@@ -51,22 +51,45 @@ class SimConfig:
     seed: int = 0
     adversarial_u: bool = True         # realize u at a worst-ish pole of U
 
+    def __post_init__(self):
+        # fail loudly at construction: an out-of-range dip fraction silently
+        # produced bw_mult traces outside the model's calibrated range, and a
+        # typo'd requirement silently fell through to the fluctuating draw
+        if not 0.0 <= self.bw_fluctuation <= 0.3:
+            raise ValueError(
+                f"bw_fluctuation must be in [0, 0.3], got "
+                f"{self.bw_fluctuation!r} (scenario bandwidth traces go "
+                f"through serving.scenarios, not this knob)")
+        if self.requirement not in ("stable", "fluctuating"):
+            raise ValueError(
+                f"unknown requirement {self.requirement!r}; expected "
+                f"'stable' or 'fluctuating'")
+
 
 @partial(jax.jit, static_argnames=("n_edge", "n_cloud"))
-def _lpt_queue(t_comp, route, n_edge: int, n_cloud: int):
+def _lpt_queue(t_comp, route, n_edge: int, n_cloud: int, avail=None):
     """Longest-processing-time packing onto per-tier server pools.
 
     t_comp/route: (..., M) — leading batch dims are vmapped over rounds.
     Returns per-task queueing delay (load of the chosen server at placement).
     The scan is over sorted tasks; the argmin over servers is vectorized.
+
+    ``avail``: optional (..., S) per-server availability (S = n_edge +
+    n_cloud, edge servers first).  Dead servers start at infinite load so
+    the argmin never places a task on them while any live server of the
+    tier remains; with a whole tier dead the queue delay is inf (the route
+    clamp in ``realize_rounds`` prevents that from being reachable).
     """
-    def one_round(tc, rt):
+    def one_round(tc, rt, av=None):
         order = jnp.argsort(-tc)                      # stable, longest first
         tc_s = tc[order]
         rt_s = rt[order]
         server_tier = jnp.concatenate([
             jnp.zeros((n_edge,), jnp.int32), jnp.ones((n_cloud,), jnp.int32)
         ])
+        init = jnp.zeros((n_edge + n_cloud,), t_comp.dtype)
+        if av is not None:
+            init = jnp.where(av > 0, init, jnp.inf)
 
         def body(loads, x):
             t, tier = x
@@ -75,20 +98,21 @@ def _lpt_queue(t_comp, route, n_edge: int, n_cloud: int):
             start = loads[j]
             return loads.at[j].add(t), start
 
-        _, start_s = jax.lax.scan(
-            body, jnp.zeros((n_edge + n_cloud,), t_comp.dtype), (tc_s, rt_s)
-        )
+        _, start_s = jax.lax.scan(body, init, (tc_s, rt_s))
         return jnp.zeros_like(tc).at[order].set(start_s)
 
     fn = one_round
     for _ in range(t_comp.ndim - 1):
         fn = jax.vmap(fn)
-    return fn(t_comp, route.astype(jnp.int32))
+    if avail is None:
+        return fn(t_comp, route.astype(jnp.int32))
+    return fn(t_comp, route.astype(jnp.int32), avail)
 
 
-@partial(jax.jit, static_argnames=("sys", "n_edge", "n_cloud"))
+@partial(jax.jit, static_argnames=("sys", "n_edge", "n_cloud", "hedge"))
 def realize_rounds(sys: SystemConfig, z, bw_mult, u, route, r, p, v, *,
-                   n_edge: int, n_cloud: int):
+                   n_edge: int, n_cloud: int, avail=None, lat_mult=None,
+                   hedge=None):
     """Deterministic realization in pure jnp (no observation noise).
 
     Shape-generic over leading batch dims: z/route/r/p/v are (..., M),
@@ -96,6 +120,25 @@ def realize_rounds(sys: SystemConfig, z, bw_mult, u, route, r, p, v, *,
     cost / accuracy / route with the same leading dims.  This is the single
     realization path shared by ``Simulator.realize``, ``realize_batch``, and
     the whole-run ``serve_scan`` driver.
+
+    Scenario fault model (all optional; ``None`` lowers the exact nominal
+    program):
+
+    ``avail``
+        (..., S) per-server availability, edge servers first.  Routes
+        pointing at a fully dead tier are clamped to the surviving tier
+        (so no realized segment ever lands on a masked server), the tier
+        uplink shrinks by the alive fraction, and the LPT packer skips
+        dead servers.
+    ``lat_mult``
+        (..., M, 2) heavy-tailed latency multipliers: column 0 scales the
+        primary dispatch, column 1 the hedged backup.
+    ``hedge``
+        static ``(quantile, cost)`` tuple — hedged dispatch fused into the
+        compute time: a backup fires at the ``quantile`` deadline of the
+        primary draws, finishing at ``deadline + backup_time + cost``; the
+        task completes at the earlier of the two (``runtime.straggler``
+        semantics).  Requires ``lat_mult``.
     """
     lat = DecisionLattice.build(sys)
     gtab = jnp.asarray(gflops_table(sys), jnp.float32)
@@ -103,9 +146,24 @@ def realize_rounds(sys: SystemConfig, z, bw_mult, u, route, r, p, v, *,
     r, p, v = r.astype(jnp.int32), p.astype(jnp.int32), v.astype(jnp.int32)
     m = route.shape[-1]
 
+    alive_frac = None
+    if avail is not None:
+        av = jnp.asarray(avail, jnp.float32)
+        n_alive = jnp.stack([av[..., :n_edge].sum(-1),
+                             av[..., n_edge:].sum(-1)], axis=-1)  # (..., 2)
+        n_total = jnp.asarray([n_edge, n_cloud], jnp.float32)
+        alive_frac = n_alive / n_total
+        # safety clamp: never realize on a tier with zero live servers
+        # (edge-down wins when both tiers are dead — matches the router's
+        # clamp_route_available ordering)
+        route = jnp.where(n_alive[..., 1:] > 0, route, jnp.zeros_like(route))
+        route = jnp.where(n_alive[..., :1] > 0, route, jnp.ones_like(route))
+
     # --- transmission: fair-share the tier uplink among its tasks
     tier_bw = jnp.asarray([sys.edge_bw_mbps, sys.cloud_bw_mbps], jnp.float32)
     bw = tier_bw * bw_mult                                     # (..., 2)
+    if alive_frac is not None:
+        bw = bw * alive_frac
     data_mbit = lat.bw[r, p, route]                            # (..., M)
     n_cloud_tasks = route.sum(axis=-1, keepdims=True)
     n_tier = jnp.concatenate([m - n_cloud_tasks, n_cloud_tasks], axis=-1)
@@ -119,8 +177,23 @@ def realize_rounds(sys: SystemConfig, z, bw_mult, u, route, r, p, v, *,
     thr = jnp.asarray([sys.edge_gflops, sys.cloud_gflops], jnp.float32)
     t_comp = gf / thr[route] * (1.0 + jnp.take_along_axis(u, v, -1))
 
+    if lat_mult is not None:
+        lm = jnp.asarray(lat_mult, jnp.float32)
+        primary = t_comp * lm[..., 0]
+        if hedge is not None:
+            hq, hcost = hedge
+            deadline = jnp.quantile(primary, hq, axis=-1, keepdims=True)
+            backup = t_comp * lm[..., 1] + deadline + hcost
+            t_comp = jnp.where(primary > deadline,
+                               jnp.minimum(primary, backup), primary)
+        else:
+            t_comp = primary
+    elif hedge is not None:
+        raise ValueError("hedge requires lat_mult (per-task latency draws)")
+
     # --- queueing: compiled LPT packing (vmapped over leading dims)
-    t_queue = _lpt_queue(t_comp, route, n_edge, n_cloud)
+    t_queue = _lpt_queue(t_comp, route, n_edge, n_cloud,
+                         None if avail is None else jnp.asarray(avail))
 
     delay = t_trans + t_queue + t_comp
     power = jnp.asarray([sys.edge_power_w, sys.cloud_power_w], jnp.float32)

@@ -388,6 +388,87 @@ def test_ccg_solve_argmin_tie_breaking():
                 err_msg=f"{force}:{k}")
 
 
+@pytest.mark.parametrize("dead_tier", [0, 1])
+def test_ccg_encode_masked_tier(dead_tier):
+    """Scenario outage lowered to the (F,) ``y_ok`` mask: every option on
+    the dead tier must drop out of the feasibility bitmask AND out of the
+    all-infeasible fallback argmax — on the jnp ref and the Pallas
+    interpret path, bit-identically to the table-based oracle with the
+    same ``tier_ok``."""
+    from repro.core.cost_model import SystemConfig
+    from repro.core.robust import RobustProblem, _encode_tasks
+    from repro.kernels.ccg_encode.ops import ccg_encode
+
+    sys_ = SystemConfig()
+    prob = RobustProblem.build(sys_)
+    lat = prob.lat
+    m = 13          # odd M also exercises the Pallas padding path
+    rng = np.random.default_rng(77 + dead_tier)
+    z = jnp.asarray(rng.uniform(0, 1, m), jnp.float32)
+    aq = np.asarray(rng.uniform(0.5, 0.75, m), np.float32)
+    aq[0] = 0.99    # all-infeasible lane: the fallback must survive masking
+    aq = jnp.asarray(aq)
+
+    tier_ok = np.ones(2, np.float32)
+    tier_ok[dead_tier] = 0.0
+    tier_ok = jnp.asarray(tier_ok)
+    y_ok = lat.tier_y_ok(tier_ok)
+
+    f_flat, feas_f, _, rec_tab = _encode_tasks(prob, z, aq, tier_ok=tier_ok)
+    pow2 = 2 ** jnp.arange(sys_.num_versions)
+    code_tab = np.asarray((feas_f * pow2[None, None]).sum(axis=-1))
+    best_tab = np.asarray(f_flat.reshape(m, -1).argmax(axis=1))
+
+    dead_cols = np.asarray(lat.tier_flat) == dead_tier
+    tier_of_best = np.asarray(lat.tier_flat)[best_tab // sys_.num_versions]
+    assert (code_tab[:, dead_cols] == 0).all()
+    assert (tier_of_best == 1 - dead_tier).all()
+
+    args = (z, aq, lat.rn_flat, lat.pn_flat, lat.tier_flat,
+            prob.b2_scaled, prob.rec_table)
+    kw = dict(margin=sys_.acc_margin_robust, num_versions=sys_.num_versions)
+    for force in ("ref", "pallas"):
+        code, rec, best = ccg_encode(*args, block_m=8, force=force,
+                                     y_ok=y_ok, **kw)
+        np.testing.assert_array_equal(np.asarray(code), code_tab, err_msg=force)
+        np.testing.assert_array_equal(np.asarray(rec), np.asarray(rec_tab),
+                                      err_msg=force)
+        np.testing.assert_array_equal(np.asarray(best), best_tab, err_msg=force)
+
+
+@pytest.mark.parametrize("dead_tier", [0, 1])
+def test_ccg_solve_masked_tier(dead_tier):
+    """Fused solve under a whole-tier outage == both retained oracles with
+    the same ``tier_ok``, and no decision — including the all-infeasible
+    fallback lane — ever lands on the dead tier."""
+    from repro.core.cost_model import SystemConfig
+    from repro.core.robust import (RobustProblem, solve_ccg, solve_ccg_fused,
+                                   solve_ccg_while)
+
+    prob = RobustProblem.build(SystemConfig())
+    m = 13
+    rng = np.random.default_rng(88 + dead_tier)
+    z = jnp.asarray(rng.uniform(0, 1, m), jnp.float32)
+    aq = np.asarray(rng.uniform(0.5, 0.75, m), np.float32)
+    aq[0] = 0.99    # all-infeasible lane: fallback must pick a survivor
+    aq = jnp.asarray(aq)
+    tier_ok = jnp.zeros(2, jnp.float32).at[1 - dead_tier].set(1.0)
+
+    unrolled = solve_ccg(prob, z, aq, tier_ok=tier_ok)
+    early = solve_ccg_while(prob, z, aq, tier_ok=tier_ok)
+    assert (np.asarray(unrolled["route"]) == 1 - dead_tier).all()
+    for force in ("ref", "pallas"):
+        fused = solve_ccg_fused(prob, z, aq, force=force, tier_ok=tier_ok)
+        assert (np.asarray(fused["route"]) == 1 - dead_tier).all(), force
+        for k in _SOLVE_KEYS:
+            np.testing.assert_array_equal(
+                np.asarray(fused[k]), np.asarray(unrolled[k]),
+                err_msg=f"{force}:{k} vs solve_ccg")
+            np.testing.assert_array_equal(
+                np.asarray(fused[k]), np.asarray(early[k]),
+                err_msg=f"{force}:{k} vs solve_ccg_while")
+
+
 @pytest.mark.parametrize("m,bm", [
     (16, 8),     # exact tiling
     (13, 8),     # odd M: ops padding path

@@ -8,7 +8,8 @@ import numpy as np
 import pytest
 
 from repro.core.cost_model import SystemConfig, accuracy_table
-from repro.runtime.straggler import hedged_dispatch, p99
+from repro.runtime.straggler import (hedged_dispatch, hedged_dispatch_jnp,
+                                     p99, p99_jnp)
 from repro.serving.policy import make_policy
 from repro.serving.simulator import SimConfig, Simulator
 
@@ -111,3 +112,27 @@ def test_hedged_dispatch_cuts_tail():
     assert p99(hedged) < 0.7 * p99(plain)
     # hedging never makes the median worse
     assert np.median(hedged) <= np.median(plain) + 1e-9
+
+    # the jnp port (the form realize_rounds fuses into the serve scan) must
+    # match the numpy oracle to float32 fidelity, and its p99 companion must
+    # report the same tail
+    hedged_j = np.asarray(hedged_dispatch_jnp(base, hedge_quantile=0.9))
+    np.testing.assert_allclose(hedged_j, hedged, rtol=1e-5, atol=1e-4)
+    assert float(p99_jnp(hedged_j)) < 0.7 * p99(plain)
+    np.testing.assert_allclose(float(p99_jnp(hedged)), p99(hedged),
+                               rtol=1e-3)
+
+    # single-replica pools degrade to the primary draws on both paths
+    np.testing.assert_array_equal(hedged_dispatch(base[:, :1]), plain)
+    np.testing.assert_allclose(
+        np.asarray(hedged_dispatch_jnp(base[:, :1])),
+        plain.astype(np.float32), rtol=1e-6)
+
+    # the jnp port is shape-generic: a batched (R, M, 2) call hedges each
+    # round against its own deadline, matching the per-round oracle
+    batched = base.reshape(4, 1000, 2)
+    out_b = np.asarray(hedged_dispatch_jnp(batched, hedge_quantile=0.9))
+    for i in range(4):
+        np.testing.assert_allclose(
+            out_b[i], hedged_dispatch(batched[i], hedge_quantile=0.9),
+            rtol=1e-5, atol=1e-4)
