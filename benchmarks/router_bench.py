@@ -198,7 +198,7 @@ def bench_policies(streams: int, rounds: int, iters: int = 5):
 
 
 def bench_scenarios(streams: int, rounds: int, iters: int = 5,
-                    scenarios=("edge_outage", "bw_collapse")):
+                    scenarios=("edge_outage", "bw_collapse", "churn")):
     """Degraded serving: every registered policy through the SAME compiled
     ``ServeSession.run`` scan under the named adverse scenarios, plus
     r2evid through the rest of the suite — ``policy/{name}@{scenario}``
@@ -224,7 +224,7 @@ def bench_scenarios(streams: int, rounds: int, iters: int = 5,
         trace = compile_scenario(scen, sys_, simc, rounds)
         degraded = apply_scenario(stream, trace)
         session = ServeSession(make_policy(name, sys_), streams, sim=simc,
-                               hedge=trace.hedge)
+                               hedge=trace.hedge, admission=trace.admission)
 
         def run(session=session, degraded=degraded):
             mets = session.run(degraded)

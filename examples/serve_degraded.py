@@ -27,7 +27,8 @@ sys_ = SystemConfig()
 simc = SimConfig(n_tasks=STREAMS, n_rounds=ROUNDS, seed=11,
                  bw_fluctuation=0.2)
 
-for name in ("none", "edge_outage", "bw_collapse", "straggler_tail"):
+for name in ("none", "edge_outage", "bw_collapse", "straggler_tail",
+             "churn", "flash_churn", "outage_collapse"):
     trace = compile_scenario(name, sys_, simc)
     scalars, mets = run_scenario(args.policy, trace, streams=STREAMS,
                                  rounds=ROUNDS, return_mets=True)
@@ -35,6 +36,10 @@ for name in ("none", "edge_outage", "bw_collapse", "straggler_tail"):
     for k in ("cost", "delay", "accuracy", "sla_violation_rate", "sla_cost",
               "cloud_frac", "recovery_rounds"):
         print(f"  {k:20s} {scalars[k]:.4f}")
+    if "alive" in mets:     # slot-pool churn: occupancy + backpressure
+        print(f"  {'mean_alive':20s} {scalars['mean_alive']:.2f} / {STREAMS}"
+              f"   max_queue={scalars['max_queue_depth']:.0f}"
+              f" dropped={scalars['dropped']:.0f}")
     if trace.onset is not None:
         cost_r = np.asarray(mets["cost"]).mean(axis=1)
         spark = " ".join(f"{c:.1f}" for c in cost_r)

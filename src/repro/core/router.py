@@ -117,9 +117,14 @@ def stage1_configure(sys_or_lat, taus, difficulty, acc_req, prev_route, prev_tau
 # C6 bandwidth repair
 # ---------------------------------------------------------------------------
 def enforce_bandwidth(sys_or_lat, sol, difficulty, acc_req, total_budget=None,
-                      rounds: int = 8, force: str = "auto"):
+                      rounds: int = 8, force: str = "auto", task_mask=None):
     """Demote (r, p) of over-budget tasks with the largest bandwidth draw that
     remain feasible after demotion; fixed-round vectorized repair.
+
+    ``task_mask``: optional (M,) bool alive mask (slot-pool churn).  Dead
+    lanes contribute zero bandwidth to the budget sum and are never demoted
+    (their reclaimable gain is zeroed), so the repair on a masked pool is
+    exactly the repair on the compacted alive batch.
 
     Each round demotes the *top-k* largest-gain tasks at once — exactly the
     prefix (by descending gain) needed to clear the excess over the budget —
@@ -147,8 +152,12 @@ def enforce_bandwidth(sys_or_lat, sol, difficulty, acc_req, total_budget=None,
     # the scan body once, flat (r·Z + p)-indexed inside
     bw_panel = jnp.moveaxis(lat.bw, -1, 0)[sol["route"]]   # (M, N, Z)
     bw_panel = bw_panel.reshape(bw_panel.shape[0], -1)     # (M, N·Z)
-    take_bw = lambda r, p: jnp.take_along_axis(
+    _take_bw = lambda r, p: jnp.take_along_axis(
         bw_panel, (r * nz + p)[:, None], axis=1)[:, 0]
+    if task_mask is None:
+        take_bw = _take_bw
+    else:
+        take_bw = lambda r, p: jnp.where(task_mask, _take_bw(r, p), 0.0)
     z = jnp.asarray(difficulty, jnp.float32)
     acc_thr = jnp.asarray(acc_req, jnp.float32) + sys.acc_margin_robust
     rn = res_norm(sys)
@@ -164,6 +173,8 @@ def enforce_bandwidth(sys_or_lat, sol, difficulty, acc_req, total_budget=None,
             _, gain, can_p = c6_tail(
                 bw_panel, r, p, sol["v"], sol["route"], z, acc_thr, rn, pn,
                 n_fps=nz, force=force)
+            if task_mask is not None:
+                gain = jnp.where(task_mask, gain, 0.0)
             p_dn = jnp.maximum(p - 1, 0)
             r_dn = jnp.maximum(r - 1, 0)
             # top-k demotion: in descending-gain order, demote tasks while the

@@ -70,7 +70,7 @@ from repro.core.router import (
 @partial(
     jax.tree_util.register_dataclass,
     data_fields=("z", "aq", "dx", "bw_mult", "u", "tier_ok", "avail",
-                 "lat_mult", "bw_scale"),
+                 "lat_mult", "bw_scale", "arrive_n", "depart"),
     meta_fields=(),
 )
 @dataclasses.dataclass(frozen=True)
@@ -99,6 +99,16 @@ class Observation:
     * ``bw_scale`` (...,): scenario scale on the C6 bandwidth budget —
       scarcity the repair pass must plan against, distinct from the realized
       ``bw_mult`` fluctuation.
+
+    The churn fields (slot-pool serving — both must be set together, and
+    their presence routes ``ServeSession.run`` to the churn driver):
+
+    * ``arrive_n`` (...,): number of new streams asking to join this round
+      (Poisson / flash-crowd arrival trace).
+    * ``depart`` (..., M): per-slot departure events — a True entry frees
+      that slot this round.  Memoryless (geometric-lifetime) draws, so a
+      per-(round, slot) Bernoulli trace is exact regardless of when the
+      slot was last admitted.
     """
     z: jnp.ndarray                 # (..., M) content difficulty
     aq: jnp.ndarray                # (..., M) accuracy requirements A^q
@@ -109,6 +119,8 @@ class Observation:
     avail: Any = None              # (..., S) per-server availability (realize)
     lat_mult: Any = None           # (..., M, 2) hedged latency multipliers
     bw_scale: Any = None           # (...,) C6 budget scale
+    arrive_n: Any = None           # (...,) stream arrivals (churn)
+    depart: Any = None             # (..., M) per-slot departures (churn)
 
     @property
     def n_streams(self) -> int:
@@ -117,6 +129,27 @@ class Observation:
     @property
     def n_rounds(self) -> int:
         return self.z.shape[0]
+
+
+def capacity_budget(sys: SystemConfig, tier_ok=None, bw_scale=None):
+    """The round's planning bandwidth budget (Mbps) from the scenario's
+    capacity telemetry, or ``None`` when no telemetry rides the observation
+    (the nominal ``total_bw_mbps`` applies).
+
+    ``bw_scale`` (measured capacity fraction) is the complete statement when
+    present; otherwise the binary ``tier_ok`` availability derives the
+    surviving tiers' share of the nominal uplink.  Shared by the C6 repair
+    (:meth:`R2EVidPolicy.repair`) and the session's admission controller, so
+    both plan against the *same* degraded budget.
+    """
+    if bw_scale is not None:
+        return jnp.asarray(sys.total_bw_mbps, jnp.float32) * bw_scale
+    if tier_ok is not None:
+        cap = sys.edge_bw_mbps + sys.cloud_bw_mbps
+        frac = (sys.edge_bw_mbps * (tier_ok[..., 0] > 0)
+                + sys.cloud_bw_mbps * (tier_ok[..., 1] > 0)) / cap
+        return jnp.asarray(sys.total_bw_mbps, jnp.float32) * frac
+    return None
 
 
 # ---------------------------------------------------------------------------
@@ -177,14 +210,36 @@ class Policy:
         """Per-stream portion of the step — no cross-task reductions."""
         raise NotImplementedError
 
-    def repair(self, sol, z, aq, tier_ok=None, bw_scale=None):
+    def repair(self, sol, z, aq, tier_ok=None, bw_scale=None, task_mask=None):
         """Cross-task tail on the full (gathered) batch; identity default.
 
         ``tier_ok`` / ``bw_scale`` carry the scenario's capacity state so a
-        repair pass can plan against the *degraded* budget; policies without
-        a repair ignore them.
+        repair pass can plan against the *degraded* budget; ``task_mask`` is
+        the slot pool's alive bitmask (dead lanes must not consume budget);
+        policies without a repair ignore them.
         """
         return sol
+
+    def reset_streams(self, state, fresh):
+        """Re-initialize the per-stream carry rows where ``fresh`` is True
+        (slot reuse under churn): a re-admitted slot is a NEW stream and must
+        not inherit the departed stream's gate cell / EMA / history.
+
+        The default resets every state leaf whose leading axis is the stream
+        axis row-wise against a fresh ``init``; leaves of any other shape
+        (global memory, e.g. sniper's profile table) are left untouched by
+        the :class:`SniperPolicy` override.
+        """
+        m = fresh.shape[0]
+        init = self.init(m)
+
+        def pick(i, x):
+            if hasattr(x, "ndim") and x.ndim >= 1 and x.shape[0] == m:
+                sel = fresh.reshape((m,) + (1,) * (x.ndim - 1))
+                return jnp.where(sel, i, x)
+            return x
+
+        return jax.tree_util.tree_map(pick, init, state)
 
     def decide(self, state, obs: Observation):
         """One full round: per-stream decision + cross-task repair."""
@@ -324,6 +379,14 @@ class SniperPolicy(Policy):
             p=jnp.zeros((n,), jnp.int32), v=jnp.zeros((n,), jnp.int32),
             has=jnp.zeros((), bool),
         )
+
+    def reset_streams(self, state, fresh):
+        # the profile table is global cross-stream memory, not per-slot
+        # state: a newly admitted stream simply matches against the existing
+        # profiles (the similarity reuse the policy is built on), so slot
+        # reuse resets nothing — and the default's leading-axis heuristic
+        # must never touch the (n_profiles, ...) leaves
+        return state
 
     def decide_stream(self, state, obs):
         z, aq = obs.z, obs.aq
@@ -493,29 +556,23 @@ class R2EVidPolicy(Policy):
                                  prev_tau=jnp.asarray(taus, jnp.float32))
         return state, sol
 
-    def repair(self, sol, z, aq, tier_ok=None, bw_scale=None):
+    def repair(self, sol, z, aq, tier_ok=None, bw_scale=None, task_mask=None):
         if not self._full:
             return sol
         sys = self.prob.lat.sys
         # plan C6 against the scenario's *degraded* budget: the traced scale
         # (collapse/recovery trace) times the surviving tiers' share of the
         # nominal uplink capacity.  None scenario fields leave total_budget
-        # at None — the exact pre-scenario program.
-        total_budget = None
-        if bw_scale is not None:
-            # the scenario's capacity telemetry is the complete statement
-            total_budget = jnp.asarray(sys.total_bw_mbps, jnp.float32) * bw_scale
-        elif tier_ok is not None:
-            # fallback: derive the surviving capacity share from the
-            # binary tier availability alone
-            cap = sys.edge_bw_mbps + sys.cloud_bw_mbps
-            frac = (sys.edge_bw_mbps * (tier_ok[..., 0] > 0)
-                    + sys.cloud_bw_mbps * (tier_ok[..., 1] > 0)) / cap
-            total_budget = jnp.asarray(sys.total_bw_mbps, jnp.float32) * frac
+        # at None — the exact pre-scenario program.  The admission
+        # controller derives the same number through capacity_budget, so
+        # what C6 plans against is what admission admitted against.
+        total_budget = capacity_budget(sys, tier_ok=tier_ok,
+                                       bw_scale=bw_scale)
         sol, bw_hist = enforce_bandwidth(self.prob.lat, sol, z, aq,
                                          total_budget=total_budget,
                                          rounds=self.rcfg.repair_rounds,
-                                         force=self.force)
+                                         force=self.force,
+                                         task_mask=task_mask)
         # route_step always exposed the repair's bandwidth trajectory;
         # keep it so the RouterEngine shim stays drop-in (the session's
         # serve output filters it out exactly like serve_scan did)

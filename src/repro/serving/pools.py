@@ -43,6 +43,10 @@ class ModelPool:
         """Prefill a token batch then decode a few tokens; returns text ids."""
         t0 = time.perf_counter()
         b, s = tokens.shape
+        if b == 0:
+            # a fully-drained tier (every routed lane dead/elsewhere) is a
+            # legal dispatch, not a crash — serve nothing, touch no stats
+            return jnp.zeros((0, decode_tokens), jnp.int32)
         logits, cache = self._prefill(self.params, {"tokens": tokens})
         out = [jnp.argmax(logits, axis=-1)]
         for _ in range(decode_tokens - 1):

@@ -39,11 +39,13 @@ import numpy as np
 from repro.core.cost_model import SystemConfig
 from repro.core.lattice import version_deviations
 from repro.serving.policy import Observation, make_policy
+from repro.serving.session import AdmissionConfig
 from repro.serving.simulator import SimConfig, Simulator
 
 #: the named adverse suite (``none`` is the benign control)
 SUITE = ("edge_outage", "bw_collapse", "flash_crowd", "straggler_tail",
-         "adversarial_u")
+         "adversarial_u", "churn", "flash_churn", "markov_bw",
+         "outage_collapse")
 
 #: Pareto tail index for straggler latency draws (heavy: infinite variance)
 _PARETO_ALPHA = 1.5
@@ -76,6 +78,9 @@ class ScenarioTrace:
     u: Any = None           # (R, K) replaces the stream's realized u
     lat_mult: Any = None    # (R, M, 2)
     hedge: Optional[tuple] = None   # static (quantile, cost)
+    arrive_n: Any = None    # (R,) stream arrivals per round (churn)
+    depart: Any = None      # (R, M) per-slot departure events (churn)
+    admission: Optional[AdmissionConfig] = None   # static admission knobs
 
 
 # ---------------------------------------------------------------------------
@@ -176,6 +181,79 @@ def _adversarial_u(r, m, n_edge, n_cloud, sys, rng):
     return ScenarioTrace(name="adversarial_u", u=u)
 
 
+def _churn(r, m, n_edge, n_cloud, sys, rng):
+    """Steady-state slot-pool churn: Poisson(λ = M/10) stream arrivals per
+    round against memoryless per-slot departures (p = 1/8, i.e. geometric
+    lifetimes with mean 8 rounds — exact regardless of when a stream was
+    admitted).  The pool starts half-full so the first rounds exercise
+    admission growth, not just replacement."""
+    lam = max(1.0, m / 10)
+    arrive = rng.poisson(lam, size=r).astype(np.int32)
+    depart = rng.random((r, m)) < (1.0 / 8.0)
+    return ScenarioTrace(name="churn", arrive_n=arrive, depart=depart,
+                         admission=AdmissionConfig(init_alive=m // 2))
+
+
+def _flash_churn(r, m, n_edge, n_cloud, sys, rng):
+    """Flash-crowd arrivals co-timed with bandwidth contention: a base
+    Poisson(2) trickle plus three bursts of M/2 streams, each landing as
+    both uplinks dip to 0.4x for 3 rounds — the window where the admission
+    controller must queue and degrade rather than admit into scarcity
+    (0.4 < the default ``degrade_frac``)."""
+    arrive = rng.poisson(2.0, size=r).astype(np.int32)
+    r0 = max(2, r // 5)
+    gap = max(3, r // 4)
+    bursts = [b for b in (r0, r0 + gap, r0 + 2 * gap) if b < r]
+    trace = np.ones((r,), np.float32)
+    for b in bursts:
+        arrive[b] += m // 2
+        trace[b:b + 3] = 0.4
+    bw_mult = np.repeat(trace[:, None], 2, axis=1)
+    depart = rng.random((r, m)) < (1.0 / 6.0)
+    return ScenarioTrace(
+        name="flash_churn", onset=int(bursts[0]), bw_mult=bw_mult,
+        bw_scale=trace.copy(), arrive_n=arrive, depart=depart,
+        admission=AdmissionConfig(init_alive=m // 2, max_queue=m))
+
+
+def _markov_bw(r, m, n_edge, n_cloud, sys, rng):
+    """Gilbert-Elliott bandwidth: the cloud uplink follows a two-state
+    Markov chain (good -> bad with p=0.15, bad -> good with p=0.35; the bad
+    state runs at 0.3x) — correlated fade-and-recover bursts rather than
+    i.i.d. fluctuation, so a policy that reacts per-round keeps arriving
+    one round late.  ``bw_scale`` mirrors the chain into the repair pass."""
+    p_gb, p_bg, bad_mult = 0.15, 0.35, 0.3
+    trace = np.ones((r,), np.float32)
+    state = 0                         # 0 = good, 1 = bad
+    for t in range(r):
+        flip = rng.random()
+        state = (1 if flip < p_gb else 0) if state == 0 else \
+                (0 if flip < p_bg else 1)
+        trace[t] = bad_mult if state else 1.0
+    bad = np.nonzero(trace < 1.0)[0]
+    bw_mult = np.stack([np.ones((r,), np.float32), trace], axis=1)
+    return ScenarioTrace(
+        name="markov_bw", onset=int(bad[0]) if bad.size else None,
+        bw_mult=bw_mult,
+        bw_scale=_cap_frac(sys, 1.0, trace).astype(np.float32))
+
+
+def _outage_collapse(r, m, n_edge, n_cloud, sys, rng):
+    """Correlated co-occurring faults: the edge tier dies at R//3 *while*
+    the cloud uplink collapses on the same schedule — the flood-back tier
+    has no spare capacity to absorb the refugees.  ``bw_scale`` carries the
+    joint capacity fraction so a capacity-aware repair plans against both
+    faults at once; single-fault scenarios each understate this regime."""
+    eo = _edge_outage(r, m, n_edge, n_cloud, sys, rng)
+    bc = _bw_collapse(r, m, n_edge, n_cloud, sys, rng)
+    alive_e = np.asarray(eo.avail)[:, :n_edge].mean(axis=1)
+    cloud_trace = np.asarray(bc.bw_mult)[:, 1]
+    return ScenarioTrace(
+        name="outage_collapse", onset=min(eo.onset, bc.onset),
+        tier_ok=eo.tier_ok, avail=eo.avail, bw_mult=bc.bw_mult,
+        bw_scale=_cap_frac(sys, alive_e, cloud_trace).astype(np.float32))
+
+
 SCENARIOS = {
     "none": _none,
     "edge_outage": _edge_outage,
@@ -183,6 +261,10 @@ SCENARIOS = {
     "flash_crowd": _flash_crowd,
     "straggler_tail": _straggler_tail,
     "adversarial_u": _adversarial_u,
+    "churn": _churn,
+    "flash_churn": _flash_churn,
+    "markov_bw": _markov_bw,
+    "outage_collapse": _outage_collapse,
 }
 
 
@@ -217,6 +299,13 @@ def apply_scenario(stream: Observation, trace: ScenarioTrace) -> Observation:
         val = getattr(trace, fld)
         if val is not None:
             kw[fld] = jnp.asarray(val, jnp.float32)
+    if (trace.arrive_n is None) != (trace.depart is None):
+        raise ValueError(
+            f"scenario {trace.name!r} carries only one of arrive_n/depart; "
+            f"a churn trace needs both")
+    if trace.arrive_n is not None:
+        kw["arrive_n"] = jnp.asarray(trace.arrive_n, jnp.int32)
+        kw["depart"] = jnp.asarray(trace.depart, bool)
     if not kw:
         return stream
     return dataclasses.replace(stream, **kw)
@@ -240,19 +329,47 @@ def scenario_metrics(mets, stream: Observation,
     * ``recovery_rounds``: rounds after ``trace.onset`` until the per-round
       mean cost first returns within 1.1x of the pre-onset mean (R - onset
       if it never does; 0 for always-on / benign scenarios).
+
+    Churn runs (an ``alive`` mask in ``mets``) aggregate over alive lanes
+    only — dead slots are zeroed by the masked realization and would
+    otherwise dilute every mean by the vacancy rate — and report three
+    extra scalars: ``mean_alive`` (pool occupancy), ``max_queue_depth``
+    and ``dropped`` (admission backpressure).
     """
-    cost_r = np.asarray(mets["cost"]).mean(axis=1)            # (R,)
     acc = np.asarray(mets["accuracy"])
     aq = np.asarray(stream.aq)
-    viol = float((acc < aq).mean())
+    extra = {}
+    if "alive" in mets:
+        w = np.asarray(mets["alive"]).astype(np.float64)      # (R, M)
+        n_r = np.maximum(w.sum(axis=1), 1.0)
+        n_tot = max(w.sum(), 1.0)
+        cost_r = np.asarray(mets["cost"]).sum(axis=1) / n_r   # (R,)
+        viol = float(((acc < aq) * w).sum() / n_tot)
+        delay = float(np.asarray(mets["delay"]).sum() / n_tot)
+        accuracy = float((acc * w).sum() / n_tot)
+        cloud_frac = float((np.maximum(np.asarray(mets["route"]), 0)
+                            * w).sum() / n_tot)
+        extra = {
+            "mean_alive": float(w.sum(axis=1).mean()),
+            "max_queue_depth": float(np.asarray(
+                mets["queue_depth"]).max()),
+            "dropped": float(np.asarray(mets["dropped"]).sum()),
+        }
+    else:
+        cost_r = np.asarray(mets["cost"]).mean(axis=1)        # (R,)
+        viol = float((acc < aq).mean())
+        delay = float(np.asarray(mets["delay"]).mean())
+        accuracy = float(acc.mean())
+        cloud_frac = (float(np.asarray(mets["route"]).mean())
+                      if "route" in mets else float("nan"))
     out = {
         "cost": float(cost_r.mean()),
-        "delay": float(np.asarray(mets["delay"]).mean()),
-        "accuracy": float(acc.mean()),
+        "delay": delay,
+        "accuracy": accuracy,
         "sla_violation_rate": viol,
         "sla_cost": float(cost_r.mean()) + SLA_PENALTY * viol,
-        "cloud_frac": float(np.asarray(mets["route"]).mean())
-        if "route" in mets else float("nan"),
+        "cloud_frac": cloud_frac,
+        **extra,
     }
     r = cost_r.shape[0]
     onset = trace.onset
@@ -292,7 +409,7 @@ def run_scenario(policy, scenario, *, streams: int = 64, rounds: int = 30,
     if isinstance(policy, str):
         policy = make_policy(policy, sys)
     session = ServeSession(policy, streams, sim=simc, hedge=trace.hedge,
-                           force=force)
+                           admission=trace.admission, force=force)
     mets = session.run(degraded)
     scalars = scenario_metrics(mets, degraded, trace)
     return (scalars, mets) if return_mets else scalars

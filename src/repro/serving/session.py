@@ -43,7 +43,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.gating import gate_step_batch
-from repro.serving.policy import Observation, Policy
+from repro.serving.policy import Observation, Policy, capacity_budget
 from repro.serving.simulator import SimConfig, realize_rounds
 
 _MET_KEYS = ("delay", "energy", "cost", "accuracy")
@@ -56,6 +56,63 @@ class FinetuneConfig:
     lr: float = 1e-3
     resync_period: int = 4     # apply one gradient step every this many rounds
     mu: float = 0.1            # proximal anchor weight (catastrophic-forgetting guard)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionConfig:
+    """SLA-aware admission control for slot-pool (churn) runs.
+
+    The controller runs inside the serve scan each round, *before* the
+    policies decide: it admits new streams only while every admitted stream
+    could still be served at minimum fidelity within the round's bandwidth
+    budget (``capacity_budget`` — the same number the C6 repair plans
+    against, tightened by ``bw_scale`` / ``tier_ok`` telemetry), queues the
+    overflow up to ``max_queue``, and drops the rest.  Streams admitted
+    while the budget is below ``degrade_frac`` of nominal are pinned to
+    minimum fidelity (r = p = v = 0) for their lifetime in the pool.
+    Static — part of the compilation key.
+    """
+    max_queue: int = 64        # waiting arrivals carried in the scan carry
+    margin: float = 0.05       # headroom fraction held back from the budget
+    degrade_frac: float = 0.5  # budget/nominal below this => degrade mode
+    init_alive: int | None = None   # slots occupied at round 0 (None = all)
+
+
+def _churn_admit(alive, degr, queue, arrive_n, depart, budget, total_bw,
+                 bw_floor, acfg: AdmissionConfig, valid):
+    """One round of slot-pool bookkeeping + admission (pure jnp, in-scan).
+
+    Departures free their slots first; then up to ``cap - n_alive`` of the
+    waiting streams (``queue`` + this round's ``arrive_n``) are admitted
+    into the lowest-indexed free slots, where ``cap`` is the largest pool
+    size whose worst-case minimum-fidelity bandwidth (``bw_floor`` per
+    stream) fits the round's budget less the safety margin.  That bound is
+    the provable SLA statement: admission never creates a stream the C6
+    repair cannot fit — zero admitted-then-infeasible segments.
+
+    ``valid`` masks the physically usable slots (all-true on the dense
+    path; excludes the sharding pad lanes on the sharded path).  Returns
+    ``(alive, degr, queue, newly, admitted, dropped)``.
+    """
+    alive = alive & ~depart & valid
+    n_alive = alive.sum()
+    cap = jnp.floor(budget * (1.0 - acfg.margin) / bw_floor).astype(jnp.int32)
+    cap = jnp.clip(cap, 0, valid.sum())
+    free = valid & ~alive
+    want = queue + arrive_n
+    can = jnp.clip(cap - n_alive, 0, free.sum())
+    admitted = jnp.minimum(want, can)
+    backlog = want - admitted
+    queue = jnp.minimum(backlog, acfg.max_queue)
+    dropped = backlog - queue
+    rank = jnp.cumsum(free.astype(jnp.int32))      # 1-indexed among free slots
+    newly = free & (rank <= admitted)
+    scarce = budget < acfg.degrade_frac * total_bw
+    # a freed slot sheds its degrade pin BEFORE re-admission, so a slot
+    # reused in the same round starts from the new stream's budget state
+    degr = (degr & alive) | (newly & scarce)
+    alive = alive | newly
+    return alive, degr, queue, newly, admitted, dropped
 
 
 def _round_output(sol, met):
@@ -83,7 +140,7 @@ def _decide_scan(policy, state, obs_seq):
     return jax.lax.scan(body, state, obs_seq)
 
 
-def _realize_obs(sys, obs, sol, n_edge, n_cloud, hedge):
+def _realize_obs(sys, obs, sol, n_edge, n_cloud, hedge, task_mask=None):
     """The one realization call every serve driver shares: scenario fault
     inputs (per-server availability, hedged latency draws) ride on the
     observation; ``None`` fields lower the exact pre-scenario program."""
@@ -91,6 +148,7 @@ def _realize_obs(sys, obs, sol, n_edge, n_cloud, hedge):
         sys, obs.z, obs.bw_mult, obs.u, sol["route"], sol["r"], sol["p"],
         sol["v"], n_edge=n_edge, n_cloud=n_cloud,
         avail=obs.avail, lat_mult=obs.lat_mult, hedge=hedge,
+        task_mask=task_mask,
     )
 
 
@@ -114,6 +172,57 @@ def _serve_run(policy, state, obs_seq, n_edge, n_cloud, hedge=None):
         return st, _round_output(sol, met)
 
     return jax.lax.scan(body, state, obs_seq)
+
+
+def _churn_round(policy, sys, bw_floor, total_bw, acfg, n_edge, n_cloud,
+                 valid, carry, obs):
+    """One slot-pool serving round: admission -> state reset on slot reuse
+    -> per-stream decision -> degrade clamp -> masked repair -> masked
+    realization.  Shared verbatim by the compiled scan body
+    (``_serve_run_churn``) and the host-loop oracle in tests, so the
+    bit-identity assertion compares the same per-round program."""
+    st, alive, degr, queue = carry
+    budget = capacity_budget(sys, tier_ok=obs.tier_ok, bw_scale=obs.bw_scale)
+    budget = total_bw if budget is None else budget
+    alive, degr, queue, newly, admitted, dropped = _churn_admit(
+        alive, degr, queue, obs.arrive_n, obs.depart, budget, total_bw,
+        bw_floor, acfg, valid)
+    st = policy.reset_streams(st, newly)
+    st, sol = policy.decide_stream(st, obs)
+    # streams admitted under scarcity serve at minimum fidelity for their
+    # pool lifetime (the admission contract their cap was computed against)
+    sol = dict(sol, **{k: jnp.where(degr, jnp.zeros_like(sol[k]), sol[k])
+                       for k in ("r", "p", "v")})
+    sol = policy.repair(sol, obs.z, obs.aq, tier_ok=obs.tier_ok,
+                        bw_scale=obs.bw_scale, task_mask=alive)
+    met = _realize_obs(sys, obs, sol, n_edge, n_cloud, None, task_mask=alive)
+    out = _round_output(sol, met)
+    out["route"] = met["route"]        # masked: -1 marks the dead slots
+    out.update(alive=alive, queue_depth=queue, admitted=admitted,
+               dropped=dropped)
+    return (st, alive, degr, queue), out
+
+
+@partial(jax.jit, static_argnames=("acfg", "n_edge", "n_cloud"),
+         donate_argnames=("carry",))
+def _serve_run_churn(policy, carry, obs_seq, acfg, n_edge, n_cloud):
+    """``_serve_run`` on a fixed-capacity slot pool: the carry additionally
+    threads the alive bitmask, the per-slot degrade pins, and the admission
+    queue depth; the arrival/departure traces ride the round-stacked
+    observation (``arrive_n`` / ``depart``) exactly like the scenario
+    fields, so the whole churned run is still ONE ``lax.scan``."""
+    sys = policy.lat.sys
+    # the per-stream minimum-fidelity bandwidth bound the admission cap is
+    # computed against: the worst tier's (r=0, p=0) draw
+    bw_floor = policy.lat.bw[0, 0, :].max()
+    total_bw = jnp.asarray(sys.total_bw_mbps, jnp.float32)
+    valid = jnp.ones_like(carry[1])
+
+    def body(c, obs):
+        return _churn_round(policy, sys, bw_floor, total_bw, acfg, n_edge,
+                            n_cloud, valid, c, obs)
+
+    return jax.lax.scan(body, carry, obs_seq)
 
 
 @partial(jax.jit, static_argnames=("ft", "n_edge", "n_cloud", "hedge"),
@@ -169,9 +278,9 @@ def _serve_run_finetune(policy, carry, obs_seq, anchor, ft, n_edge, n_cloud,
 
 
 @partial(jax.jit, static_argnames=("n_edge", "n_cloud", "mesh", "mesh_axis",
-                                   "has_dx", "hedge"))
+                                   "has_dx", "hedge", "acfg"))
 def _serve_run_sharded(policy, state, obs_seq, n_edge, n_cloud, mesh,
-                       mesh_axis, has_dx, hedge=None):
+                       mesh_axis, has_dx, hedge=None, churn=None, acfg=None):
     """One compiled sharded scan over the whole run, for ANY shardable policy.
 
     The policy's per-stream stage (``decide_stream``) runs on each device's
@@ -183,6 +292,13 @@ def _serve_run_sharded(policy, state, obs_seq, n_edge, n_cloud, mesh,
     path.  The carry stays local: ``repair`` is contractually forbidden from
     changing anything the per-stream state depends on (C6 demotes fidelity,
     never flips routes), so the locally-built state is already exact.
+
+    ``churn`` (optional): the slot pool's ``(alive, degr, queue)`` carry at
+    real M.  The admission controller runs replicated (identical
+    deterministic arithmetic per device — padding lanes are excluded via a
+    static ``valid`` mask so they are never admitted); only the slot-reset
+    mask is sliced down to the local shard.  ``None`` lowers the exact
+    churn-free program.
     """
     from jax.sharding import PartitionSpec as P
 
@@ -191,6 +307,7 @@ def _serve_run_sharded(policy, state, obs_seq, n_edge, n_cloud, mesh,
     m = obs_seq.z.shape[1]
     n_dev = mesh.shape[mesh_axis]
     pad = (-m) % n_dev
+    m_pad = m + pad
 
     pad_streams = lambda x: jnp.moveaxis(
         pad_leading(jnp.moveaxis(x, 1, 0), pad), 0, 1)
@@ -207,13 +324,48 @@ def _serve_run_sharded(policy, state, obs_seq, n_edge, n_cloud, mesh,
         avail=obs_seq.avail,
         lat_mult=obs_seq.lat_mult,
         bw_scale=obs_seq.bw_scale,
+        arrive_n=obs_seq.arrive_n,
+        # the departure trace feeds the replicated admission arithmetic at
+        # padded width (pad lanes never alive, so their entries are inert)
+        depart=None if obs_seq.depart is None else pad_streams(obs_seq.depart),
     )
     state = policy.pad_state(state, pad)
+    if churn is not None:
+        alive0, degr0, queue0 = churn
+        churn = (pad_leading(alive0, pad), pad_leading(degr0, pad), queue0)
+    sys = policy.lat.sys
+    total_bw = jnp.asarray(sys.total_bw_mbps, jnp.float32)
+    valid = jnp.arange(m_pad) < m
 
-    def shard_body(pol, st_l, dx_l, z_l, aq_l, bwm_seq, u_seq, scn_seq):
-        def body(st, xs):
-            dx, z, aq, bwm, u, scn = xs
+    def shard_body(pol, st_l, churn_c, dx_l, z_l, aq_l, bwm_seq, u_seq,
+                   scn_seq, churn_seq):
+        bw_floor = pol.lat.bw[0, 0, :].max()
+
+        def body(c, xs):
+            st, churn_c = c
+            dx, z, aq, bwm, u, scn, chn = xs
             tier_ok, avail, lat_mult, bw_scale = scn
+            task_mask = None
+            churn_out = {}
+            if churn_c is not None:
+                alive, degr, queue = churn_c
+                arr_n, dep = chn
+                budget = capacity_budget(sys, tier_ok=tier_ok,
+                                         bw_scale=bw_scale)
+                budget = total_bw if budget is None else budget
+                alive, degr, queue, newly, admitted, dropped = _churn_admit(
+                    alive, degr, queue, arr_n, dep, budget, total_bw,
+                    bw_floor, acfg, valid)
+                # only this device's slice of the reset mask touches the
+                # local carry
+                m_local = z.shape[0]
+                start = jax.lax.axis_index(mesh_axis) * m_local
+                newly_l = jax.lax.dynamic_slice(newly, (start,), (m_local,))
+                st = pol.reset_streams(st, newly_l)
+                churn_c = (alive, degr, queue)
+                task_mask = alive[:m]
+                churn_out = dict(alive=task_mask, queue_depth=queue,
+                                 admitted=admitted, dropped=dropped)
             obs_l = Observation(z=z, aq=aq, dx=dx, tier_ok=tier_ok)
             st, sol = pol.decide_stream(st, obs_l)
             # cross-task tail on the gathered REAL batch (padding dropped):
@@ -222,29 +374,45 @@ def _serve_run_sharded(policy, state, obs_seq, n_edge, n_cloud, mesh,
                 x, mesh_axis, axis=0, tiled=True)[:m]
             z_g, aq_g = gather(z), gather(aq)
             sol_g = {k: gather(v) for k, v in sol.items()}
+            if churn_c is not None:
+                degr_m = churn_c[1][:m]
+                sol_g = dict(sol_g, **{
+                    k: jnp.where(degr_m, jnp.zeros_like(sol_g[k]), sol_g[k])
+                    for k in ("r", "p", "v")})
             sol_g = pol.repair(sol_g, z_g, aq_g, tier_ok=tier_ok,
-                               bw_scale=bw_scale)
+                               bw_scale=bw_scale, task_mask=task_mask)
             obs_g = Observation(z=z_g, aq=aq_g, bw_mult=bwm, u=u,
                                 avail=avail, lat_mult=lat_mult)
             met = _realize_obs(pol.lat.sys, obs_g, sol_g, n_edge, n_cloud,
-                               hedge)
-            return st, _round_output(sol_g, met)
+                               hedge, task_mask=task_mask)
+            out = _round_output(sol_g, met)
+            if churn_c is not None:
+                out["route"] = met["route"]
+                out.update(churn_out)
+            return (st, churn_c), out
 
-        return jax.lax.scan(
-            body, st_l, (dx_l, z_l, aq_l, bwm_seq, u_seq, scn_seq))
+        (st_l, churn_c), mets = jax.lax.scan(
+            body, (st_l, churn_c),
+            (dx_l, z_l, aq_l, bwm_seq, u_seq, scn_seq, churn_seq))
+        return st_l, churn_c, mets
 
     dx_spec = P(None, mesh_axis) if has_dx else P()
     scn_seq = (obs_seq.tier_ok, obs_seq.avail, obs_seq.lat_mult,
                obs_seq.bw_scale)
-    final_state, mets = shard_map(
+    churn_seq = (None if churn is None
+                 else (obs_seq.arrive_n, obs_seq.depart))
+    final_state, final_churn, mets = shard_map(
         shard_body, mesh=mesh,
-        in_specs=(P(), P(mesh_axis), dx_spec, P(None, mesh_axis),
-                  P(None, mesh_axis), P(), P(), P()),
-        out_specs=(P(mesh_axis), P()), check_vma=False,
-    )(policy, state, obs_seq.dx, obs_seq.z, obs_seq.aq, obs_seq.bw_mult,
-      obs_seq.u, scn_seq)
+        in_specs=(P(), P(mesh_axis), P(), dx_spec, P(None, mesh_axis),
+                  P(None, mesh_axis), P(), P(), P(), P()),
+        out_specs=(P(mesh_axis), P(), P()), check_vma=False,
+    )(policy, state, churn, obs_seq.dx, obs_seq.z, obs_seq.aq,
+      obs_seq.bw_mult, obs_seq.u, scn_seq, churn_seq)
     final_state = jax.tree_util.tree_map(lambda x: x[:m], final_state)
-    return final_state, mets
+    if final_churn is not None:
+        alive_f, degr_f, queue_f = final_churn
+        final_churn = (alive_f[:m], degr_f[:m], queue_f)
+    return final_state, final_churn, mets
 
 
 # ---------------------------------------------------------------------------
@@ -278,6 +446,11 @@ class ServeSession:
     pools : dict, optional
         Tier -> :class:`~repro.serving.pools.ModelPool` live endpoints;
         ``dispatch`` maps a routed solution's token workloads onto them.
+    admission : AdmissionConfig, optional
+        Enable the slot-pool churn path: ``n_streams`` becomes the slot
+        capacity M_cap and ``run`` expects ``arrive_n`` / ``depart`` traces
+        on the stream.  The admission controller, slot recycling and
+        alive-lane masking all run inside the one compiled scan.
     """
 
     def __init__(self, policy: Policy, n_streams: int, *,
@@ -286,6 +459,7 @@ class ServeSession:
                  mesh=None, mesh_axis: str = "data",
                  finetune: FinetuneConfig | None = None,
                  hedge: tuple | None = None,
+                 admission: AdmissionConfig | None = None,
                  force: str | None = None, pools=None, state=None):
         if force is not None and hasattr(policy, "force"):
             policy = dataclasses.replace(policy, force=force)
@@ -306,6 +480,8 @@ class ServeSession:
         self.pools = pools
         self.finetune = finetune
         self.hedge = hedge
+        self.admission = admission
+        self._churn_carry = None
         self.state = policy.init(n_streams) if state is None else state
         self._rounds_done = jnp.zeros((), jnp.int32)
         if finetune is not None:
@@ -335,7 +511,37 @@ class ServeSession:
         if n_streams is not None:
             self.n_streams = n_streams
         self.state = self.policy.init(self.n_streams)
+        self._churn_carry = None
         self._rounds_done = jnp.zeros((), jnp.int32)
+
+    def _churn_init(self):
+        """Fresh slot-pool carry: the first ``init_alive`` slots occupied
+        (all of them by default), no degrade pins, empty queue."""
+        m = self.n_streams
+        k = m if self.admission.init_alive is None \
+            else min(self.admission.init_alive, m)
+        return (jnp.arange(m) < k, jnp.zeros((m,), bool),
+                jnp.zeros((), jnp.int32))
+
+    def _check_churn(self, stream: Observation):
+        if (stream.arrive_n is None) != (stream.depart is None):
+            raise ValueError(
+                "churn needs BOTH arrive_n and depart on the stream "
+                "(one without the other is almost certainly a trace bug)")
+        has_churn = stream.arrive_n is not None
+        if has_churn and self.admission is None:
+            raise ValueError(
+                "stream carries churn traces (arrive_n/depart) but the "
+                "session has no AdmissionConfig — pass admission= to "
+                "ServeSession")
+        if has_churn and self.finetune is not None:
+            raise NotImplementedError(
+                "online fine-tuning under stream churn is not supported")
+        if has_churn and self.hedge is not None:
+            raise ValueError(
+                "hedged dispatch is not supported under churn (the hedge "
+                "fair-share model has no alive-lane masking)")
+        return has_churn
 
     def _check_obs(self, obs: Observation, rounds: bool):
         want = (2, 3) if rounds else (1, 2)
@@ -411,6 +617,16 @@ class ServeSession:
         if mesh is not None:
             return self.run_sharded(mesh, stream,
                                     mesh_axis=mesh_axis or self.mesh_axis)
+        if self._check_churn(stream):
+            if self._churn_carry is None:
+                self._churn_carry = self._churn_init()
+            alive, degr, queue = self._churn_carry
+            carry = (self.state, alive, degr, queue)
+            (self.state, alive, degr, queue), mets = _serve_run_churn(
+                self.policy, carry, stream, self.admission, self.n_edge,
+                self.n_cloud)
+            self._churn_carry = (alive, degr, queue)
+            return mets
         if self.finetune is not None:
             carry = (self.state, self.policy.gate_params, self._rounds_done)
             (self.state, params, self._rounds_done), mets = \
@@ -445,9 +661,18 @@ class ServeSession:
                 "online fine-tuning is single-mesh only for now")
         if n_rounds is not None:
             stream = jax.tree_util.tree_map(lambda x: x[:n_rounds], stream)
-        self.state, mets = _serve_run_sharded(
+        has_churn = self._check_churn(stream)
+        churn = acfg = None
+        if has_churn:
+            if self._churn_carry is None:
+                self._churn_carry = self._churn_init()
+            churn, acfg = self._churn_carry, self.admission
+        self.state, churn, mets = _serve_run_sharded(
             self.policy, self.state, stream, self.n_edge, self.n_cloud,
-            mesh, mesh_axis, stream.dx is not None, self.hedge)
+            mesh, mesh_axis, stream.dx is not None, self.hedge,
+            churn, acfg)
+        if has_churn:
+            self._churn_carry = churn
         return mets
 
     def run_elastic(self, stream: Observation, failures: dict, *,
@@ -471,7 +696,20 @@ class ServeSession:
         self._check_obs(stream, rounds=True)
         r_total = stream.z.shape[0]
         cluster = ClusterSim(n_nodes or len(jax.devices()))
-        bounds = sorted(r for r in failures if 0 < r < r_total)
+        # a malformed plan silently skipped here would make the run look
+        # healthier than the experiment the caller asked for — fail loudly
+        for r, nodes in failures.items():
+            if not isinstance(r, (int, np.integer)) or not 0 < r < r_total:
+                raise ValueError(
+                    f"failures round {r!r} is outside the valid boundary "
+                    f"range 1..{r_total - 1} (failures fire *before* a "
+                    f"round; round 0 has no prior segment)")
+            for node in nodes:
+                if not 0 <= int(node) < cluster.n_nodes:
+                    raise ValueError(
+                        f"failures[{r}] names unknown node {node!r}; "
+                        f"cluster has nodes 0..{cluster.n_nodes - 1}")
+        bounds = sorted(failures)
         mesh = elastic_remesh(cluster.alive, prefer="data")
         self.mesh_history = [(0, mesh)]
         parts, start = [], 0

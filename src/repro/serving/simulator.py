@@ -112,7 +112,7 @@ def _lpt_queue(t_comp, route, n_edge: int, n_cloud: int, avail=None):
 @partial(jax.jit, static_argnames=("sys", "n_edge", "n_cloud", "hedge"))
 def realize_rounds(sys: SystemConfig, z, bw_mult, u, route, r, p, v, *,
                    n_edge: int, n_cloud: int, avail=None, lat_mult=None,
-                   hedge=None):
+                   hedge=None, task_mask=None):
     """Deterministic realization in pure jnp (no observation noise).
 
     Shape-generic over leading batch dims: z/route/r/p/v are (..., M),
@@ -139,7 +139,18 @@ def realize_rounds(sys: SystemConfig, z, bw_mult, u, route, r, p, v, *,
         primary draws, finishing at ``deadline + backup_time + cost``; the
         task completes at the earlier of the two (``runtime.straggler``
         semantics).  Requires ``lat_mult``.
+    ``task_mask``
+        (..., M) bool alive mask (slot-pool churn).  Dead lanes are excluded
+        from the fair-share tier counts, take zero compute time into the LPT
+        packer (so alive lanes pack exactly as on the compacted pool — they
+        sort last and add no server load), and come out with zeroed metrics
+        and ``route = -1`` (no realized segment ever lands on a dead slot).
+        Incompatible with ``hedge`` (the deadline quantile over a mixed
+        alive/dead batch is undefined).
     """
+    if task_mask is not None and hedge is not None:
+        raise ValueError("hedged dispatch is not supported with task_mask "
+                         "(the deadline quantile would mix dead lanes)")
     lat = DecisionLattice.build(sys)
     gtab = jnp.asarray(gflops_table(sys), jnp.float32)
     route = route.astype(jnp.int32)
@@ -165,8 +176,16 @@ def realize_rounds(sys: SystemConfig, z, bw_mult, u, route, r, p, v, *,
     if alive_frac is not None:
         bw = bw * alive_frac
     data_mbit = lat.bw[r, p, route]                            # (..., M)
-    n_cloud_tasks = route.sum(axis=-1, keepdims=True)
-    n_tier = jnp.concatenate([m - n_cloud_tasks, n_cloud_tasks], axis=-1)
+    if task_mask is not None:
+        mask = jnp.asarray(task_mask, bool)
+        n_cloud_tasks = (route * mask).sum(axis=-1, keepdims=True)
+        n_alive = mask.sum(axis=-1, keepdims=True)
+        n_tier = jnp.concatenate(
+            [n_alive - n_cloud_tasks, n_cloud_tasks], axis=-1)
+    else:
+        mask = None
+        n_cloud_tasks = route.sum(axis=-1, keepdims=True)
+        n_tier = jnp.concatenate([m - n_cloud_tasks, n_cloud_tasks], axis=-1)
     n_tier = jnp.maximum(n_tier, 1)
     share = (jnp.take_along_axis(bw, route, -1)
              / jnp.take_along_axis(n_tier, route, -1))
@@ -176,6 +195,10 @@ def realize_rounds(sys: SystemConfig, z, bw_mult, u, route, r, p, v, *,
     gf = gtab[r, p, v, route]
     thr = jnp.asarray([sys.edge_gflops, sys.cloud_gflops], jnp.float32)
     t_comp = gf / thr[route] * (1.0 + jnp.take_along_axis(u, v, -1))
+    if mask is not None:
+        # dead lanes take zero compute into the packer: they sort after
+        # every alive lane (stable argsort) and add no load to any server
+        t_comp = jnp.where(mask, t_comp, 0.0)
 
     if lat_mult is not None:
         lm = jnp.asarray(lat_mult, jnp.float32)
@@ -203,6 +226,11 @@ def realize_rounds(sys: SystemConfig, z, bw_mult, u, route, r, p, v, *,
     # pointwise accuracy at the chosen configs — same formula as the
     # (..., M, F, K) table, evaluated only at the M gathered entries
     acc = accuracy_at(sys, z, r, p, v, route)
+    if mask is not None:
+        zero = lambda x: jnp.where(mask, x, 0.0)
+        return {"delay": zero(delay), "energy": zero(energy),
+                "cost": zero(cost), "accuracy": zero(acc),
+                "route": jnp.where(mask, route, -1)}
     return {"delay": delay, "energy": energy, "cost": cost,
             "accuracy": acc, "route": route}
 

@@ -56,12 +56,14 @@ def test_compile_scenario_shapes_and_determinism():
     for name in SUITE:
         t1 = compile_scenario(name, SYS, simc, seed=3)
         t2 = compile_scenario(name, SYS, simc, seed=3)
-        for fld in ("tier_ok", "avail", "bw_mult", "bw_scale", "u", "lat_mult"):
+        for fld in ("tier_ok", "avail", "bw_mult", "bw_scale", "u", "lat_mult",
+                    "arrive_n", "depart"):
             a, b = getattr(t1, fld), getattr(t2, fld)
             assert (a is None) == (b is None), (name, fld)
             if a is not None:
                 np.testing.assert_array_equal(a, b, err_msg=f"{name}.{fld}")
         assert t1.hedge == t2.hedge
+        assert t1.admission == t2.admission
 
     eo = compile_scenario("edge_outage", SYS, simc)
     assert eo.tier_ok.shape == (r, 2) and eo.avail.shape == (r, s_tot)
@@ -85,6 +87,36 @@ def test_compile_scenario_shapes_and_determinism():
     # the Γ budget is saturated every round, rotating across versions
     assert ((au.u > 0).sum(axis=1) == SYS.gamma).all()
     assert not (au.u > 0).all(axis=0).any() or SYS.gamma == SYS.num_versions
+
+    ch = compile_scenario("churn", SYS, simc)
+    assert ch.arrive_n.shape == (r,) and ch.arrive_n.dtype == np.int32
+    assert ch.depart.shape == (r, m) and ch.depart.dtype == bool
+    assert ch.admission is not None and ch.admission.init_alive == m // 2
+
+    fc = compile_scenario("flash_churn", SYS, simc)
+    assert fc.arrive_n.max() >= m // 2          # at least one flash burst
+    assert fc.bw_mult.shape == (r, 2) and fc.bw_mult.min() == \
+        pytest.approx(0.4)
+    # the bursts land below degrade_frac: admission must degrade, not admit
+    assert fc.bw_scale.min() < fc.admission.degrade_frac
+    assert fc.onset is not None and fc.arrive_n[fc.onset] >= m // 2
+
+    mb = compile_scenario("markov_bw", SYS, simc)
+    assert mb.bw_mult.shape == (r, 2)
+    assert (mb.bw_mult[:, 0] == 1).all()        # edge links stay local
+    assert set(np.unique(mb.bw_mult[:, 1])) <= {np.float32(0.3),
+                                                np.float32(1.0)}
+
+    oc = compile_scenario("outage_collapse", SYS, simc)
+    assert oc.tier_ok.shape == (r, 2) and oc.avail.shape == (r, s_tot)
+    assert oc.bw_mult.shape == (r, 2)
+    # both faults fire: the edge tier drops AND the cloud uplink collapses
+    assert oc.tier_ok[:, 0].min() == 0.0
+    assert oc.bw_mult[:, 1].min() == pytest.approx(0.15)
+    # the joint budget is tighter than either single-fault trace
+    eo2 = compile_scenario("edge_outage", SYS, simc)
+    bc2 = compile_scenario("bw_collapse", SYS, simc)
+    assert oc.bw_scale.min() < min(eo2.bw_scale.min(), bc2.bw_scale.min())
 
     with pytest.raises(KeyError, match="unknown scenario"):
         compile_scenario("volcano", SYS, simc)
@@ -345,3 +377,25 @@ def test_r2evid_beats_baselines_under_degradation_and_matches_goldens():
             np.testing.assert_allclose(
                 val, gold[key][metric], rtol=2e-3, atol=2e-3,
                 err_msg=f"{key}:{metric}")
+
+
+def test_r2evid_recovery_slo_under_correlated_faults_matches_goldens():
+    """The correlated regime (edge outage + cloud bw collapse co-occurring)
+    at the golden operating point: r2evid keeps its SLA-cost standing over
+    the cloud-pinned baseline AND recovers no slower than the checked-in
+    ``recovery_rounds`` SLO — the per-policy recovery golden is the gate,
+    not just the cost table."""
+    ours = run_scenario("r2evid", "outage_collapse")
+    base = run_scenario("a2_cloud_only", "outage_collapse")
+    assert ours["sla_cost"] < base["sla_cost"], (
+        f"r2evid sla_cost {ours['sla_cost']:.3f} not better than "
+        f"a2_cloud_only {base['sla_cost']:.3f} under outage_collapse")
+    gold = json.loads((ROOT / "SCENARIO_GOLDENS.json").read_text())["rows"]
+    g = gold["r2evid@outage_collapse"]
+    assert ours["recovery_rounds"] <= g["recovery_rounds"] + 1e-6, (
+        f"r2evid recovery_rounds regressed: {ours['recovery_rounds']} vs "
+        f"golden SLO {g['recovery_rounds']}")
+    for metric in ("cost", "sla_cost", "sla_violation_rate",
+                   "recovery_rounds"):
+        np.testing.assert_allclose(ours[metric], g[metric], rtol=2e-3,
+                                   atol=2e-3, err_msg=metric)
