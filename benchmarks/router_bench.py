@@ -42,6 +42,15 @@ Prints ``name,us_per_call,derived`` CSV lines (the repo benchmark contract):
                            us_per_segment derived so batch amortization —
                            and the LPT-packing realization wall — is
                            measured, not assumed
+  sweep/route_step_sharded@M{m} / sweep/route_step_hier@M{m}
+                         — ``--sharded-sweep`` rows: the whole compiled
+                           sharded serve round on a FAKED 8-device host mesh
+                           (subprocess — the device count locks at jax init),
+                           gathered tail vs the hierarchical O(n_devices)
+                           tail, so the claim that killing the per-round
+                           O(M) all-gather does not cost latency is a
+                           checked-in measured number (``vs_gathered`` in
+                           the hier rows' derived field)
 
 With ``--json`` the same rows are written to ``BENCH_router.json`` so every
 PR records the perf trajectory (CI uploads it as an artifact), and a
@@ -57,6 +66,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import pathlib
 import subprocess
 import sys
@@ -340,6 +350,78 @@ def bench_streams_sweep(sweep, steps: int):
     return rows
 
 
+def bench_sharded_child(sweep, rounds: int, iters: int):
+    """Runs INSIDE the faked-device subprocess: one compiled sharded serve
+    scan per (M, tail-mode) cell, gathered vs hierarchical, µs per round.
+    The pools are sized 2/1 servers per device so the hierarchical static
+    partition divides evenly at any device count."""
+    from repro.core.cost_model import SystemConfig
+    from repro.serving.policy import make_policy
+    from repro.serving.session import ServeSession
+    from repro.serving.simulator import SimConfig, Simulator
+
+    sys_ = SystemConfig()
+    n_dev = jax.device_count()
+    mesh = jax.make_mesh((n_dev,), ("data",))
+    pol = make_policy("r2evid", sys_)
+    rows = []
+    for m in sweep:
+        simc = SimConfig(n_tasks=m, n_rounds=rounds, seed=m,
+                         bw_fluctuation=0.2)
+        stream = Simulator(sys_, simc).sample_stream(rounds)
+        kw = dict(sim=simc, n_edge=2 * n_dev, n_cloud=n_dev)
+        sess_g = ServeSession(pol, m, **kw)
+
+        def run_g():
+            mets = sess_g.run_sharded(mesh, stream)
+            jax.block_until_ready(mets["cost"])
+
+        us_g = _timeit(run_g, iters) / rounds
+        sess_h = ServeSession(pol, m, hierarchical=True, **kw)
+
+        def run_h():
+            mets = sess_h.run_sharded(mesh, stream)
+            jax.block_until_ready(mets["cost"])
+
+        us_h = _timeit(run_h, iters) / rounds
+        rows.append((f"sweep/route_step_sharded@M{m}", us_g,
+                     f"streams={m},devices={n_dev},"
+                     f"us_per_segment={us_g / m:.3f}"))
+        rows.append((f"sweep/route_step_hier@M{m}", us_h,
+                     f"streams={m},devices={n_dev},"
+                     f"us_per_segment={us_h / m:.3f},"
+                     f"vs_gathered={us_h / max(us_g, 1e-9):.3f}x"))
+    return rows
+
+
+def bench_sharded(sweep_csv: str, rounds: int, steps: int, n_dev: int = 8):
+    """Spawn the faked-``n_dev``-device child (the device count locks at
+    first jax init, so the parent process cannot fake it itself) and parse
+    its CSV rows back into the parent's row list."""
+    env = dict(
+        os.environ,
+        XLA_FLAGS=f"--xla_force_host_platform_device_count={n_dev}",
+        JAX_PLATFORMS="cpu",
+    )
+    cmd = [sys.executable, __file__, "--_sharded-child",
+           "--sharded-sweep", sweep_csv, "--scan-rounds", str(rounds),
+           "--steps", str(steps)]
+    out = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                         timeout=3600)
+    if out.returncode != 0:
+        raise RuntimeError("sharded bench child failed:\n"
+                           + out.stderr[-3000:])
+    rows = []
+    for line in out.stdout.splitlines():
+        if line.startswith("sweep/route_step_"):
+            name, us, derived = line.split(",", 2)
+            rows.append((name, float(us), derived))
+    if not rows:
+        raise RuntimeError("sharded bench child produced no rows:\n"
+                           + out.stdout[-2000:])
+    return rows
+
+
 def bench_serve_scan(streams: int, rounds: int, iters: int = 5):
     from repro.core.cost_model import SystemConfig
     from repro.core.features import feature_dim
@@ -443,12 +525,25 @@ def main():
                          "large-M scaling rows (empty string disables; 512 "
                          "stays in the default so baseline refreshes keep "
                          "the M=512 rows CI checks against)")
+    ap.add_argument("--sharded-sweep", default="256,1024,4096",
+                    help="comma-separated stream counts for the sharded "
+                         "serve rows on a faked 8-device host mesh (empty "
+                         "string disables; runs in a subprocess)")
+    ap.add_argument("--_sharded-child", dest="_sharded_child",
+                    action="store_true", help=argparse.SUPPRESS)
     ap.add_argument("--json", action="store_true",
                     help="also write BENCH_router.json next to the repo root")
     ap.add_argument("--check", metavar="BASELINE",
                     help="fail if any benchmark is >%.0fx slower than the "
                          "same-named row in this baseline JSON" % REGRESSION_FACTOR)
     args = ap.parse_args()
+
+    if args._sharded_child:
+        sweep = [int(s) for s in args.sharded_sweep.split(",")]
+        for name, us, derived in bench_sharded_child(
+                sweep, args.scan_rounds, max(args.steps // 6, 3)):
+            print(f"{name},{us:.3f},{derived}")
+        return
 
     rows = []
     rows += bench_route_step(args.streams, args.steps)
@@ -459,6 +554,9 @@ def main():
     if args.streams_sweep:
         sweep = [int(s) for s in args.streams_sweep.split(",")]
         rows += bench_streams_sweep(sweep, args.steps)
+    if args.sharded_sweep:
+        rows += bench_sharded(args.sharded_sweep, args.scan_rounds,
+                              args.steps)
 
     print("name,us_per_call,derived")
     for name, us, derived in rows:
@@ -488,7 +586,7 @@ def main():
         # headline rows' evolution without archaeology through git
         headline = {
             name: round(us, 2) for name, us, _ in rows
-            if name.startswith(("router/", "sweep/ccg@", "sweep/route_step@"))
+            if name.startswith(("router/", "sweep/ccg@", "sweep/route_step"))
         }
         try:
             commit = subprocess.run(

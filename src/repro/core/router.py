@@ -203,6 +203,51 @@ def enforce_bandwidth(sys_or_lat, sol, difficulty, acc_req, total_budget=None,
     return dict(sol, r=r, p=p), bw_hist
 
 
+def subbudget_from_stats(bw_d, w_d, budget):
+    """Per-shard C6 sub-budgets from the fleet's (draw, weight) stat vectors.
+
+    ``bw_d``: (D,) each shard's pre-repair bandwidth draw; ``w_d``: (D,)
+    each shard's alive-lane weight; ``budget``: () the global C6 budget B.
+    The fair split is weight-proportional, but a shard under its fair share
+    keeps its whole draw (it is never demoted) and *grants* its headroom to
+    the over-budget shards, so only the true global shortfall
+    ``max(Σbw − B, 0)`` is demoted — pro-rated over the shards that own
+    excess:
+
+        fair_d   = B · w_d / Σw
+        excess_d = max(bw_d − fair_d, 0);  head_d = max(fair_d − bw_d, 0)
+        target_d = bw_d − excess_d · max(Σexcess − Σhead, 0) / Σexcess
+
+    Since Σexcess − Σhead = Σbw − B, the targets sum to ``min(Σbw, B)``:
+    repairing each shard to its target meets C6 *exactly* whenever the
+    dense repair would, with zero demotion when the budget has slack.
+    With one shard this degenerates to ``min(bw, B)`` — the dense budget.
+    """
+    bw_d = jnp.asarray(bw_d, jnp.float32)
+    w_d = jnp.asarray(w_d, jnp.float32)
+    fair = budget * w_d / jnp.maximum(w_d.sum(), 1e-9)
+    excess = jnp.maximum(bw_d - fair, 0.0)
+    head = jnp.maximum(fair - bw_d, 0.0)
+    shortfall = jnp.maximum(excess.sum() - head.sum(), 0.0)
+    scale = shortfall / jnp.maximum(excess.sum(), 1e-9)
+    return bw_d - excess * scale
+
+
+def shard_bandwidth_target(local_bw, local_weight, budget, axis_name):
+    """This shard's C6 repair target from ONE O(n_devices) scalar exchange.
+
+    Inside ``shard_map``: all-gathers the 2-scalar (draw, weight) stat of
+    every shard — the only cross-device traffic the hierarchical repair
+    needs — and returns this shard's :func:`subbudget_from_stats` entry.
+    Demotion then happens entirely within the shards owning the excess.
+    """
+    stats = jnp.stack([jnp.asarray(local_bw, jnp.float32),
+                       jnp.asarray(local_weight, jnp.float32)])
+    stats = jax.lax.all_gather(stats, axis_name)            # (D, 2)
+    target = subbudget_from_stats(stats[:, 0], stats[:, 1], budget)
+    return target[jax.lax.axis_index(axis_name)]
+
+
 # ---------------------------------------------------------------------------
 # Streaming engine: stateful per-segment routing
 # ---------------------------------------------------------------------------

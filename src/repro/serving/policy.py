@@ -61,6 +61,7 @@ from repro.core.router import (
     enforce_bandwidth,
     init_router_state,
     route_segment,
+    shard_bandwidth_target,
 )
 
 
@@ -199,8 +200,14 @@ class Policy:
 
     name: str = "policy"
     #: whether ``decide_stream`` is per-task independent (safe to run on a
-    #: local stream shard).  Sniper's profile table couples tasks globally.
+    #: local stream shard).  Sniper's profile table couples tasks globally
+    #: unless its replicated-profile variant preseeds it (the default).
     shardable: bool = True
+    #: whether the per-stream carry is identical on every device (global
+    #: memory, e.g. sniper's profile table) rather than sharded over
+    #: streams.  The sharded session then keeps the state replicated and
+    #: calls :meth:`preseed_sharded` once at run start.
+    state_replicated: bool = False
 
     def init(self, n_streams: int):
         """Fresh per-stream carry (any pytree; () for stateless policies)."""
@@ -219,6 +226,26 @@ class Policy:
         policies without a repair ignore them.
         """
         return sol
+
+    def repair_local(self, sol, z, aq, *, axis_name, tier_ok=None,
+                     bw_scale=None, task_mask=None):
+        """Hierarchical cross-task tail on this device's LOCAL stream shard.
+
+        The sharded session's ``hierarchical=True`` mode calls this instead
+        of gathering the batch for :meth:`repair`; implementations may only
+        exchange O(n_devices) *scalars* over ``axis_name`` (the per-shard
+        sub-budget split — see ``docs/SHARDING.md``), never any (M, ...)
+        array.  Same contract as ``repair`` otherwise: demote fidelity,
+        never flip a route.  Identity default for policies without a tail.
+        """
+        return sol
+
+    def preseed_sharded(self, state, z, aq, tier_ok=None):
+        """One-time run-start hook for replicated-state policies: build the
+        global memory (e.g. sniper's first-round profile table) from the
+        gathered round-0 ``(z, aq)`` so every device carries the same table
+        without any in-scan collective.  Identity default."""
+        return state
 
     def reset_streams(self, state, fresh):
         """Re-initialize the per-stream carry rows where ``fresh`` is True
@@ -352,20 +379,40 @@ class SniperState(NamedTuple):
     p: jnp.ndarray
     v: jnp.ndarray
     has: jnp.ndarray      # () bool — profile table captured yet?
+    warmup: jnp.ndarray   # () bool — table preseeded at run start: emit the
+    #                       per-task fresh configs this round (dense round-0
+    #                       semantics), then start the similarity reuse
 
 
 @partial(jax.tree_util.register_dataclass,
-         data_fields=("_lat",), meta_fields=("n_profiles",))
+         data_fields=("_lat",), meta_fields=("n_profiles",
+                                             "replicated_profile"))
 @dataclasses.dataclass(frozen=True)
 class SniperPolicy(Policy):
     """Sniper — similarity-aware reuse of the first round's profiled configs.
     The profile table is the carry; it is written exactly once (first round),
-    matching the host closure.  Not shardable: the nearest-profile match is a
-    global cross-task lookup."""
+    matching the host closure.
+
+    The nearest-profile match is a global cross-task lookup, so under stream
+    sharding the table must be REPLICATED, not sharded: with
+    ``replicated_profile=True`` (the default) the sharded session keeps the
+    state on every device and preseeds the table once at run start from the
+    gathered round-0 batch (:meth:`preseed_sharded` + the ``warmup`` flag
+    keep round-0 decisions identical to the dense first-round capture).
+    ``replicated_profile=False`` restores the historical refusal to run
+    sharded at all."""
     _lat: DecisionLattice
     n_profiles: int = 8
+    replicated_profile: bool = True
     name = "sniper"
-    shardable = False
+
+    @property
+    def shardable(self):
+        return self.replicated_profile
+
+    @property
+    def state_replicated(self):
+        return True
 
     @property
     def lat(self):
@@ -377,8 +424,13 @@ class SniperPolicy(Policy):
             key=jnp.full((n, 2), jnp.inf, jnp.float32),
             route=jnp.zeros((n,), jnp.int32), r=jnp.zeros((n,), jnp.int32),
             p=jnp.zeros((n,), jnp.int32), v=jnp.zeros((n,), jnp.int32),
-            has=jnp.zeros((), bool),
+            has=jnp.zeros((), bool), warmup=jnp.zeros((), bool),
         )
+
+    def pad_state(self, state, pad):
+        # no per-stream leaves: the (n_profiles, ...) table must never grow
+        # with the stream padding
+        return state
 
     def reset_streams(self, state, fresh):
         # the profile table is global cross-stream memory, not per-slot
@@ -387,6 +439,23 @@ class SniperPolicy(Policy):
         # reuse resets nothing — and the default's leading-axis heuristic
         # must never touch the (n_profiles, ...) leaves
         return state
+
+    def preseed_sharded(self, state, z, aq, tier_ok=None):
+        """Build the round-0 profile table ahead of the scan (the sharded
+        run's one-time gather): identical rows to the dense first-round
+        capture, with ``warmup`` marking that round 0 must still emit the
+        per-task fresh configs rather than table matches."""
+        k = min(self.n_profiles, z.shape[0])
+        fresh = _argmin_feasible_jnp(self._lat, z[:k], aq[:k],
+                                     tier_ok=tier_ok)
+        return SniperState(
+            key=state.key.at[:k].set(jnp.stack([z[:k], aq[:k]], axis=1)),
+            route=state.route.at[:k].set(fresh["route"].astype(jnp.int32)),
+            r=state.r.at[:k].set(fresh["r"].astype(jnp.int32)),
+            p=state.p.at[:k].set(fresh["p"].astype(jnp.int32)),
+            v=state.v.at[:k].set(fresh["v"].astype(jnp.int32)),
+            has=jnp.ones((), bool), warmup=jnp.ones((), bool),
+        )
 
     def decide_stream(self, state, obs):
         z, aq = obs.z, obs.aq
@@ -402,7 +471,9 @@ class SniperPolicy(Policy):
         far = d.min(axis=1) > 0.02                       # profile refresh
         reused = {f: jnp.where(far, fresh[f], getattr(state, f)[nn])
                   for f in ("route", "r", "p", "v")}
-        sol = {f: jnp.where(state.has, reused[f], fresh[f]) for f in reused}
+        # a preseeded table still serves its capture round fresh (warmup)
+        use_table = state.has & ~state.warmup
+        sol = {f: jnp.where(use_table, reused[f], fresh[f]) for f in reused}
         if obs.tier_ok is not None:
             # a reused profile may point at a tier that has since died
             sol["route"] = clamp_route_available(sol["route"], obs.tier_ok)
@@ -416,7 +487,7 @@ class SniperPolicy(Policy):
             r=jnp.where(state.has, state.r, cap["r"]),
             p=jnp.where(state.has, state.p, cap["p"]),
             v=jnp.where(state.has, state.v, cap["v"]),
-            has=jnp.ones((), bool),
+            has=jnp.ones((), bool), warmup=jnp.zeros((), bool),
         )
         return new, sol
 
@@ -576,6 +647,41 @@ class R2EVidPolicy(Policy):
         # route_step always exposed the repair's bandwidth trajectory;
         # keep it so the RouterEngine shim stays drop-in (the session's
         # serve output filters it out exactly like serve_scan did)
+        sol["bw_history"] = bw_hist
+        return sol
+
+    def repair_local(self, sol, z, aq, *, axis_name, tier_ok=None,
+                     bw_scale=None, task_mask=None):
+        """Hierarchical C6: repair this shard against its sub-budget.
+
+        One all-gather of TWO scalars per device — this shard's pre-repair
+        bandwidth draw and its alive-lane weight — buys the fleet-wide
+        headroom-granted target (:func:`shard_bandwidth_target`); the
+        demotion itself then runs entirely shard-locally.  The targets sum
+        to ``min(Σbw, B)``, so the composition satisfies C6 exactly
+        whenever the dense repair does, and with one device the target is
+        ``min(bw, B)`` — the dense program bit for bit.
+        """
+        if not self._full:
+            return sol
+        lat = self.prob.lat
+        sys = lat.sys
+        budget = capacity_budget(sys, tier_ok=tier_ok, bw_scale=bw_scale)
+        if budget is None:
+            budget = jnp.asarray(sys.total_bw_mbps, jnp.float32)
+        bw_i = lat.solution_bandwidth(sol)
+        if task_mask is not None:
+            bw_i = jnp.where(task_mask, bw_i, 0.0)
+            weight = task_mask.sum().astype(jnp.float32)
+        else:
+            weight = jnp.asarray(bw_i.shape[0], jnp.float32)
+        target = shard_bandwidth_target(bw_i.sum(), weight, budget,
+                                        axis_name)
+        sol, bw_hist = enforce_bandwidth(lat, sol, z, aq,
+                                         total_budget=target,
+                                         rounds=self.rcfg.repair_rounds,
+                                         force=self.force,
+                                         task_mask=task_mask)
         sol["bw_history"] = bw_hist
         return sol
 

@@ -140,15 +140,18 @@ def _decide_scan(policy, state, obs_seq):
     return jax.lax.scan(body, state, obs_seq)
 
 
-def _realize_obs(sys, obs, sol, n_edge, n_cloud, hedge, task_mask=None):
+def _realize_obs(sys, obs, sol, n_edge, n_cloud, hedge, task_mask=None,
+                 n_tier=None, tier_frac=None):
     """The one realization call every serve driver shares: scenario fault
     inputs (per-server availability, hedged latency draws) ride on the
-    observation; ``None`` fields lower the exact pre-scenario program."""
+    observation; ``None`` fields lower the exact pre-scenario program.
+    ``n_tier`` / ``tier_frac`` are the hierarchical sharded path's globally
+    exchanged fair-share scalars (partitioned server pools)."""
     return realize_rounds(
         sys, obs.z, obs.bw_mult, obs.u, sol["route"], sol["r"], sol["p"],
         sol["v"], n_edge=n_edge, n_cloud=n_cloud,
         avail=obs.avail, lat_mult=obs.lat_mult, hedge=hedge,
-        task_mask=task_mask,
+        task_mask=task_mask, n_tier=n_tier, tier_frac=tier_frac,
     )
 
 
@@ -278,20 +281,42 @@ def _serve_run_finetune(policy, carry, obs_seq, anchor, ft, n_edge, n_cloud,
 
 
 @partial(jax.jit, static_argnames=("n_edge", "n_cloud", "mesh", "mesh_axis",
-                                   "has_dx", "hedge", "acfg"))
+                                   "has_dx", "hedge", "acfg", "hierarchical"))
 def _serve_run_sharded(policy, state, obs_seq, n_edge, n_cloud, mesh,
-                       mesh_axis, has_dx, hedge=None, churn=None, acfg=None):
+                       mesh_axis, has_dx, hedge=None, churn=None, acfg=None,
+                       hierarchical=False):
     """One compiled sharded scan over the whole run, for ANY shardable policy.
 
     The policy's per-stream stage (``decide_stream``) runs on each device's
     local shard of the stream axis M (padded to a multiple of the device
-    count with dummy streams that the policy's ``pad_state`` marks inert);
-    the decisions are then all-gathered so the cross-task tail
-    (``Policy.repair``, LPT realization) is computed on the exact real-M
-    batch — replicated arithmetic, hence metrics identical to the dense
-    path.  The carry stays local: ``repair`` is contractually forbidden from
-    changing anything the per-stream state depends on (C6 demotes fidelity,
-    never flips routes), so the locally-built state is already exact.
+    count with dummy streams that the policy's ``pad_state`` marks inert).
+    The cross-task tail then runs in one of two modes:
+
+    * **gathered** (``hierarchical=False``, the parity oracle): the
+      decisions are all-gathered so ``Policy.repair`` + LPT realization run
+      on the exact real-M batch — replicated arithmetic, hence metrics
+      identical to the dense path, at the cost of one O(M) collective per
+      round.
+    * **hierarchical** (``hierarchical=True``): NO (M, ...) array ever
+      crosses devices inside the round body.  ``Policy.repair_local``
+      repairs each shard against its scalar-exchanged C6 sub-budget
+      (:func:`repro.core.router.shard_bandwidth_target`), and realization
+      packs each shard's segments onto a statically partitioned slice of
+      the server pool, with only the per-shard tier task counts (psum of 2
+      ints) and the tier alive fractions exchanged for the uplink
+      fair-share terms.  C6 is met exactly; queueing delay reflects the
+      partitioned pools (see docs/SHARDING.md for the contract and bound).
+      Requires ``n_edge`` / ``n_cloud`` divisible by the device count;
+      incompatible with ``hedge`` (the deadline quantile is a global order
+      statistic).
+
+    Either way the carry stays local: the repair is contractually forbidden
+    from changing anything the per-stream state depends on (C6 demotes
+    fidelity, never flips routes), so the locally-built state is already
+    exact.  Replicated-state policies (sniper's profile table) instead keep
+    their carry whole on every device and are preseeded once at run start
+    from the gathered round-0 batch (``Policy.preseed_sharded``) — the one
+    O(M) gather those policies need, outside the scan.
 
     ``churn`` (optional): the slot pool's ``(alive, degr, queue)`` carry at
     real M.  The admission controller runs replicated (identical
@@ -302,34 +327,51 @@ def _serve_run_sharded(policy, state, obs_seq, n_edge, n_cloud, mesh,
     """
     from jax.sharding import PartitionSpec as P
 
+    from repro.serving.simulator import clamp_route_by_avail
     from repro.sharding.compat import pad_leading, shard_map
 
     m = obs_seq.z.shape[1]
     n_dev = mesh.shape[mesh_axis]
     pad = (-m) % n_dev
     m_pad = m + pad
+    if hierarchical:
+        if hedge is not None:
+            raise ValueError("hierarchical sharding cannot hedge (the "
+                             "deadline quantile is a global order statistic)")
+        if n_edge % n_dev or n_cloud % n_dev:
+            raise ValueError(
+                f"hierarchical sharding partitions the server pool "
+                f"statically: n_edge={n_edge} and n_cloud={n_cloud} must "
+                f"both divide by the {n_dev}-device mesh")
+    e_l, c_l = n_edge // n_dev, n_cloud // n_dev
 
-    pad_streams = lambda x: jnp.moveaxis(
-        pad_leading(jnp.moveaxis(x, 1, 0), pad), 0, 1)
+    pad_streams = lambda x: pad_leading(x, pad, axis=1)
+    # lat_mult is per-task: the hierarchical realization consumes it on the
+    # local shard, the gathered one on the replicated real-M batch
+    lat_mult = obs_seq.lat_mult
+    if hierarchical and lat_mult is not None:
+        lat_mult = pad_streams(lat_mult)
     obs_seq = Observation(
         z=pad_streams(obs_seq.z),
         aq=pad_streams(obs_seq.aq),
         dx=pad_streams(obs_seq.dx) if has_dx else None,
         bw_mult=obs_seq.bw_mult,
         u=obs_seq.u,
-        # scenario fields stay replicated: tier_ok / bw_scale feed the
-        # per-stream decision and the gathered repair, avail / lat_mult only
-        # the real-M realization tail — none of them shard over streams
+        # the remaining scenario fields stay replicated: tier_ok / bw_scale
+        # feed the per-stream decision and the repair budget, avail the
+        # realization tail (sliced per shard in hierarchical mode) — none
+        # of them shard over streams
         tier_ok=obs_seq.tier_ok,
         avail=obs_seq.avail,
-        lat_mult=obs_seq.lat_mult,
+        lat_mult=lat_mult,
         bw_scale=obs_seq.bw_scale,
         arrive_n=obs_seq.arrive_n,
         # the departure trace feeds the replicated admission arithmetic at
         # padded width (pad lanes never alive, so their entries are inert)
         depart=None if obs_seq.depart is None else pad_streams(obs_seq.depart),
     )
-    state = policy.pad_state(state, pad)
+    if not policy.state_replicated:
+        state = policy.pad_state(state, pad)
     if churn is not None:
         alive0, degr0, queue0 = churn
         churn = (pad_leading(alive0, pad), pad_leading(degr0, pad), queue0)
@@ -340,12 +382,24 @@ def _serve_run_sharded(policy, state, obs_seq, n_edge, n_cloud, mesh,
     def shard_body(pol, st_l, churn_c, dx_l, z_l, aq_l, bwm_seq, u_seq,
                    scn_seq, churn_seq):
         bw_floor = pol.lat.bw[0, 0, :].max()
+        m_local = z_l.shape[1]
+        start = jax.lax.axis_index(mesh_axis) * m_local
+        slice_l = lambda x: jax.lax.dynamic_slice(x, (start,), (m_local,))
+        valid_l = slice_l(valid)
+        if pol.state_replicated:
+            # the one O(M) gather a global-memory policy needs, ONCE at run
+            # start (outside the scan): preseed the replicated table from
+            # the gathered round-0 batch
+            g0 = lambda x: jax.lax.all_gather(
+                x[0], mesh_axis, axis=0, tiled=True)[:m]
+            t0 = None if scn_seq[0] is None else scn_seq[0][0]
+            st_l = pol.preseed_sharded(st_l, g0(z_l), g0(aq_l), tier_ok=t0)
 
         def body(c, xs):
             st, churn_c = c
             dx, z, aq, bwm, u, scn, chn = xs
             tier_ok, avail, lat_mult, bw_scale = scn
-            task_mask = None
+            task_mask = degr_l = None
             churn_out = {}
             if churn_c is not None:
                 alive, degr, queue = churn_c
@@ -358,17 +412,60 @@ def _serve_run_sharded(policy, state, obs_seq, n_edge, n_cloud, mesh,
                     bw_floor, acfg, valid)
                 # only this device's slice of the reset mask touches the
                 # local carry
-                m_local = z.shape[0]
-                start = jax.lax.axis_index(mesh_axis) * m_local
-                newly_l = jax.lax.dynamic_slice(newly, (start,), (m_local,))
-                st = pol.reset_streams(st, newly_l)
+                st = pol.reset_streams(st, slice_l(newly))
                 churn_c = (alive, degr, queue)
                 task_mask = alive[:m]
-                churn_out = dict(alive=task_mask, queue_depth=queue,
-                                 admitted=admitted, dropped=dropped)
+                degr_l = slice_l(degr)
+                churn_out = dict(queue_depth=queue, admitted=admitted,
+                                 dropped=dropped)
             obs_l = Observation(z=z, aq=aq, dx=dx, tier_ok=tier_ok)
             st, sol = pol.decide_stream(st, obs_l)
-            # cross-task tail on the gathered REAL batch (padding dropped):
+
+            if hierarchical:
+                # -- hierarchical tail: O(n_devices) scalars only ---------
+                mask_l = (valid_l if churn_c is None
+                          else slice_l(churn_c[0]))
+                if degr_l is not None:
+                    sol = dict(sol, **{
+                        k: jnp.where(degr_l, jnp.zeros_like(sol[k]), sol[k])
+                        for k in ("r", "p", "v")})
+                sol = pol.repair_local(sol, z, aq, axis_name=mesh_axis,
+                                       tier_ok=tier_ok, bw_scale=bw_scale,
+                                       task_mask=mask_l)
+                tier_frac = avail_l = None
+                route_c = sol["route"].astype(jnp.int32)
+                if avail is not None:
+                    # this shard's statically partitioned server-pool slice
+                    avail_l = jnp.concatenate([
+                        jax.lax.dynamic_slice(
+                            avail[:n_edge],
+                            (jax.lax.axis_index(mesh_axis) * e_l,), (e_l,)),
+                        jax.lax.dynamic_slice(
+                            avail[n_edge:],
+                            (jax.lax.axis_index(mesh_axis) * c_l,), (c_l,)),
+                    ])
+                    route_c = clamp_route_by_avail(route_c, avail_l, e_l, c_l)
+                    n_alive_g = jnp.stack([avail[:n_edge].sum(),
+                                           avail[n_edge:].sum()])
+                    tier_frac = n_alive_g / jnp.asarray(
+                        [n_edge, n_cloud], jnp.float32)
+                # global fair-share counts: psum of TWO ints per device
+                ncl = (route_c * mask_l).sum()
+                n_tier_g = jax.lax.psum(
+                    jnp.stack([mask_l.sum() - ncl, ncl]), mesh_axis)
+                obs_r = Observation(z=z, aq=aq, bw_mult=bwm, u=u,
+                                    avail=avail_l, lat_mult=lat_mult)
+                met = _realize_obs(pol.lat.sys, obs_r, sol, e_l, c_l, None,
+                                   task_mask=mask_l, n_tier=n_tier_g,
+                                   tier_frac=tier_frac)
+                out = _round_output(sol, met)
+                if churn_c is not None:
+                    out["route"] = met["route"]
+                    out["alive"] = mask_l
+                return (st, churn_c), (out, churn_out)
+
+            # -- gathered tail (the parity oracle): cross-task repair +
+            # realization on the gathered REAL batch (padding dropped) —
             # identical arithmetic to the dense path on every device
             gather = lambda x: jax.lax.all_gather(
                 x, mesh_axis, axis=0, tiled=True)[:m]
@@ -388,6 +485,7 @@ def _serve_run_sharded(policy, state, obs_seq, n_edge, n_cloud, mesh,
             out = _round_output(sol_g, met)
             if churn_c is not None:
                 out["route"] = met["route"]
+                out["alive"] = task_mask
                 out.update(churn_out)
             return (st, churn_c), out
 
@@ -396,19 +494,31 @@ def _serve_run_sharded(policy, state, obs_seq, n_edge, n_cloud, mesh,
             (dx_l, z_l, aq_l, bwm_seq, u_seq, scn_seq, churn_seq))
         return st_l, churn_c, mets
 
+    state_spec = P() if policy.state_replicated else P(mesh_axis)
     dx_spec = P(None, mesh_axis) if has_dx else P()
+    lat_spec = (P(None, mesh_axis)
+                if hierarchical and obs_seq.lat_mult is not None else P())
     scn_seq = (obs_seq.tier_ok, obs_seq.avail, obs_seq.lat_mult,
                obs_seq.bw_scale)
     churn_seq = (None if churn is None
                  else (obs_seq.arrive_n, obs_seq.depart))
+    # hierarchical metrics come out split: per-task leaves stay sharded
+    # over streams, the admission scalars replicated
+    mets_spec = (P(None, mesh_axis), P()) if hierarchical else P()
     final_state, final_churn, mets = shard_map(
         shard_body, mesh=mesh,
-        in_specs=(P(), P(mesh_axis), P(), dx_spec, P(None, mesh_axis),
-                  P(None, mesh_axis), P(), P(), P(), P()),
-        out_specs=(P(mesh_axis), P(), P()), check_vma=False,
+        in_specs=(P(), state_spec, P(), dx_spec, P(None, mesh_axis),
+                  P(None, mesh_axis), P(), P(), (P(), P(), lat_spec, P()),
+                  P()),
+        out_specs=(state_spec, P(), mets_spec), check_vma=False,
     )(policy, state, churn, obs_seq.dx, obs_seq.z, obs_seq.aq,
       obs_seq.bw_mult, obs_seq.u, scn_seq, churn_seq)
-    final_state = jax.tree_util.tree_map(lambda x: x[:m], final_state)
+    if hierarchical:
+        per_task, scalars = mets
+        mets = {k: v[:, :m] for k, v in per_task.items()}
+        mets.update(scalars)
+    if not policy.state_replicated:
+        final_state = jax.tree_util.tree_map(lambda x: x[:m], final_state)
     if final_churn is not None:
         alive_f, degr_f, queue_f = final_churn
         final_churn = (alive_f[:m], degr_f[:m], queue_f)
@@ -451,6 +561,12 @@ class ServeSession:
         capacity M_cap and ``run`` expects ``arrive_n`` / ``depart`` traces
         on the stream.  The admission controller, slot recycling and
         alive-lane masking all run inside the one compiled scan.
+    hierarchical : bool
+        Default tail mode for :meth:`run_sharded`: ``True`` repairs and
+        realizes per shard with only O(n_devices) scalars exchanged each
+        round (hierarchical C6 sub-budgets + partitioned server pools),
+        ``False`` (default) all-gathers the real-M batch — the parity
+        oracle.  See :func:`_serve_run_sharded`.
     """
 
     def __init__(self, policy: Policy, n_streams: int, *,
@@ -460,6 +576,7 @@ class ServeSession:
                  finetune: FinetuneConfig | None = None,
                  hedge: tuple | None = None,
                  admission: AdmissionConfig | None = None,
+                 hierarchical: bool = False,
                  force: str | None = None, pools=None, state=None):
         if force is not None and hasattr(policy, "force"):
             policy = dataclasses.replace(policy, force=force)
@@ -481,6 +598,7 @@ class ServeSession:
         self.finetune = finetune
         self.hedge = hedge
         self.admission = admission
+        self.hierarchical = hierarchical
         self._churn_carry = None
         self.state = policy.init(n_streams) if state is None else state
         self._rounds_done = jnp.zeros((), jnp.int32)
@@ -641,14 +759,21 @@ class ServeSession:
         return mets
 
     def run_sharded(self, mesh, stream: Observation,
-                    n_rounds: int | None = None, mesh_axis: str = "data"):
+                    n_rounds: int | None = None, mesh_axis: str = "data",
+                    hierarchical: bool | None = None):
         """The whole run as ONE compiled sharded scan over the stream axis.
 
-        Metrics and the final carry are identical to the dense :meth:`run`
-        (the cross-task tail runs on the all-gathered real-M batch); M pads
-        to any device count.
+        In the default gathered mode, metrics and the final carry are
+        identical to the dense :meth:`run` (the cross-task tail runs on the
+        all-gathered real-M batch); M pads to any device count.
+        ``hierarchical=True`` (or the session default) switches the
+        cross-task tail to per-shard sub-budget repair + partitioned-pool
+        realization with O(n_devices) scalar exchange per round — exact C6,
+        per-shard queueing (see docs/SHARDING.md).
         """
         self._check_obs(stream, rounds=True)
+        if hierarchical is None:
+            hierarchical = self.hierarchical
         if stream.u is None or stream.bw_mult is None:
             raise ValueError("session.run_sharded needs bw_mult and u on "
                              "the stream")
@@ -659,6 +784,10 @@ class ServeSession:
         if self.finetune is not None:
             raise NotImplementedError(
                 "online fine-tuning is single-mesh only for now")
+        if hierarchical and self.hedge is not None:
+            raise ValueError(
+                "hierarchical sharding cannot hedge: the deadline quantile "
+                "is a global order statistic (use the gathered mode)")
         if n_rounds is not None:
             stream = jax.tree_util.tree_map(lambda x: x[:n_rounds], stream)
         has_churn = self._check_churn(stream)
@@ -670,7 +799,7 @@ class ServeSession:
         self.state, churn, mets = _serve_run_sharded(
             self.policy, self.state, stream, self.n_edge, self.n_cloud,
             mesh, mesh_axis, stream.dx is not None, self.hedge,
-            churn, acfg)
+            churn, acfg, hierarchical)
         if has_churn:
             self._churn_carry = churn
         return mets

@@ -109,10 +109,24 @@ def _lpt_queue(t_comp, route, n_edge: int, n_cloud: int, avail=None):
     return fn(t_comp, route.astype(jnp.int32), avail)
 
 
+def clamp_route_by_avail(route, avail, n_edge: int, n_cloud: int):
+    """Route clamp against a server pool's availability: never realize on a
+    tier with zero live servers (edge-down wins when both tiers are dead —
+    matches the router's ``clamp_route_available`` ordering).  Shared by
+    ``realize_rounds`` and the sharded session's partitioned realization,
+    which must count post-clamp routes *before* exchanging the per-shard
+    tier totals."""
+    av = jnp.asarray(avail, jnp.float32)
+    alive_e = av[..., :n_edge].sum(-1, keepdims=True)
+    alive_c = av[..., n_edge:].sum(-1, keepdims=True)
+    route = jnp.where(alive_c > 0, route, jnp.zeros_like(route))
+    return jnp.where(alive_e > 0, route, jnp.ones_like(route))
+
+
 @partial(jax.jit, static_argnames=("sys", "n_edge", "n_cloud", "hedge"))
 def realize_rounds(sys: SystemConfig, z, bw_mult, u, route, r, p, v, *,
                    n_edge: int, n_cloud: int, avail=None, lat_mult=None,
-                   hedge=None, task_mask=None):
+                   hedge=None, task_mask=None, n_tier=None, tier_frac=None):
     """Deterministic realization in pure jnp (no observation noise).
 
     Shape-generic over leading batch dims: z/route/r/p/v are (..., M),
@@ -147,6 +161,14 @@ def realize_rounds(sys: SystemConfig, z, bw_mult, u, route, r, p, v, *,
         and ``route = -1`` (no realized segment ever lands on a dead slot).
         Incompatible with ``hedge`` (the deadline quantile over a mixed
         alive/dead batch is undefined).
+    ``n_tier`` / ``tier_frac``
+        Partitioned-realization overrides (the hierarchical sharded session):
+        when the caller packs each shard's segments onto a *slice* of the
+        server pool, the uplink fair-share terms must still be computed
+        against the GLOBAL tier task counts (``n_tier``: (..., 2)) and the
+        global tier alive fraction (``tier_frac``: (..., 2)), exchanged as
+        per-shard scalars.  ``None`` (the default) derives both locally —
+        the exact dense program.
     """
     if task_mask is not None and hedge is not None:
         raise ValueError("hedged dispatch is not supported with task_mask "
@@ -164,11 +186,12 @@ def realize_rounds(sys: SystemConfig, z, bw_mult, u, route, r, p, v, *,
                              av[..., n_edge:].sum(-1)], axis=-1)  # (..., 2)
         n_total = jnp.asarray([n_edge, n_cloud], jnp.float32)
         alive_frac = n_alive / n_total
-        # safety clamp: never realize on a tier with zero live servers
-        # (edge-down wins when both tiers are dead — matches the router's
-        # clamp_route_available ordering)
-        route = jnp.where(n_alive[..., 1:] > 0, route, jnp.zeros_like(route))
-        route = jnp.where(n_alive[..., :1] > 0, route, jnp.ones_like(route))
+        route = clamp_route_by_avail(route, av, n_edge, n_cloud)
+    if tier_frac is not None:
+        # partitioned pools: the uplink shrinks by the FLEET's alive
+        # fraction, not this slice's (the clamp above stays local — a task
+        # can only land on this slice's servers)
+        alive_frac = jnp.asarray(tier_frac, jnp.float32)
 
     # --- transmission: fair-share the tier uplink among its tasks
     tier_bw = jnp.asarray([sys.edge_bw_mbps, sys.cloud_bw_mbps], jnp.float32)
@@ -176,14 +199,15 @@ def realize_rounds(sys: SystemConfig, z, bw_mult, u, route, r, p, v, *,
     if alive_frac is not None:
         bw = bw * alive_frac
     data_mbit = lat.bw[r, p, route]                            # (..., M)
-    if task_mask is not None:
-        mask = jnp.asarray(task_mask, bool)
+    mask = None if task_mask is None else jnp.asarray(task_mask, bool)
+    if n_tier is not None:
+        n_tier = jnp.asarray(n_tier)          # caller-exchanged global counts
+    elif mask is not None:
         n_cloud_tasks = (route * mask).sum(axis=-1, keepdims=True)
         n_alive = mask.sum(axis=-1, keepdims=True)
         n_tier = jnp.concatenate(
             [n_alive - n_cloud_tasks, n_cloud_tasks], axis=-1)
     else:
-        mask = None
         n_cloud_tasks = route.sum(axis=-1, keepdims=True)
         n_tier = jnp.concatenate([m - n_cloud_tasks, n_cloud_tasks], axis=-1)
     n_tier = jnp.maximum(n_tier, 1)

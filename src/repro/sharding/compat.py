@@ -12,15 +12,18 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 
-def pad_leading(x, pad: int, value=0):
-    """Pad the leading (batch) axis of ``x`` by ``pad`` rows of ``value``.
+def pad_leading(x, pad: int, value=0, axis: int = 0):
+    """Pad the batch ``axis`` of ``x`` by ``pad`` rows of ``value``.
 
     The shared idiom behind M-to-any-device-count sharding: pad with inert
-    dummies, shard, slice the real batch back out.
+    dummies, shard, slice the real batch back out.  ``axis`` defaults to the
+    leading axis; round-stacked (R, M, ...) streams pad ``axis=1`` directly
+    instead of a moveaxis round-trip per field.
     """
     if pad == 0:
         return x
-    widths = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
     return jnp.pad(x, widths, constant_values=value)
 
 try:  # jax >= 0.5

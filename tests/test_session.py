@@ -1,6 +1,8 @@
 """ServeSession tests: the unified compiled driver vs the pre-PR-5 goldens
 (bit-level shim parity), step-vs-scan identity, the sharded run, the online
 gate fine-tune carry, and the deprecation shims."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -122,7 +124,8 @@ def test_session_step_sequence_matches_run_scan():
                                   np.asarray(s_step.state.prev_route))
 
 
-@pytest.mark.parametrize("name", ["r2evid", "a2_cloud_only", "jcab", "rdap"])
+@pytest.mark.parametrize("name", ["r2evid", "a2_cloud_only", "jcab", "rdap",
+                                  "sniper"])
 def test_session_run_sharded_matches_dense(name):
     """On the host mesh the sharded driver agrees with the dense scan for
     every shardable policy (the real multi-shard + padding path is covered
@@ -145,13 +148,17 @@ def test_session_run_sharded_matches_dense(name):
                                    atol=1e-5, err_msg=k)
 
 
-def test_session_sharded_rejects_global_policies():
-    """Sniper's profile table couples tasks globally — the session must
-    refuse to shard it rather than silently change its decisions."""
+def test_session_sharded_rejects_opted_out_sniper():
+    """Sniper runs sharded by default via its replicated profile table;
+    ``replicated_profile=False`` restores the historical global coupling,
+    and the session must refuse to shard THAT rather than silently change
+    its decisions."""
     mesh = jax.make_mesh((jax.device_count(),), ("data",))
     sim = Simulator(SYS, SimConfig(n_rounds=2, n_tasks=6, seed=1))
     stream = sim.sample_stream()
-    session = ServeSession(make_policy("sniper", SYS), n_streams=6)
+    policy = dataclasses.replace(make_policy("sniper", SYS),
+                                 replicated_profile=False)
+    session = ServeSession(policy, n_streams=6)
     with pytest.raises(ValueError, match="shard"):
         session.run_sharded(mesh, stream)
 

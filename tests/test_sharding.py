@@ -78,3 +78,20 @@ def test_overrides_apply():
     rules = make_rules(mesh, "serve", overrides={"experts": None, "expert_mlp": "model"})
     assert rules.spec(("experts",)) == P(None)
     assert rules.spec(("expert_mlp",)) == P("model")
+
+
+def test_pad_leading_pads_any_axis():
+    """pad_leading(axis=) pads exactly the named axis — the sharded serve
+    driver uses axis=1 to pad the stream axis of round-stacked (R, M, ...)
+    arrays without the moveaxis round-trip."""
+    from repro.sharding.compat import pad_leading
+
+    x = np.arange(24, dtype=np.float32).reshape(2, 3, 4)
+    y = np.asarray(pad_leading(x, 2, axis=1))
+    assert y.shape == (2, 5, 4)
+    np.testing.assert_array_equal(y[:, :3], x)
+    assert (y[:, 3:] == 0).all()
+    # default keeps the historical leading-axis behavior
+    z = np.asarray(pad_leading(x, 1, value=7.0))
+    assert z.shape == (3, 3, 4)
+    assert (z[2] == 7.0).all()
