@@ -87,19 +87,27 @@ def main():
         route_ms = (time.perf_counter() - t_route) * 1e3
 
         t0 = time.perf_counter()
-        session.dispatch(sol)
+        served = session.dispatch(sol)
         dt = time.perf_counter() - t0
         taus = sol.get("tau")
         print(f"round {rnd}: routes={np.asarray(sol['route']).tolist()} "
               + (f"taus={np.round(np.asarray(taus), 2).tolist()} "
                  if taus is not None else "")
               + f"route={route_ms:.0f}ms serve={dt*1e3:.0f}ms")
+        for tier, st in sorted(served.items()):
+            print(f"  tier{tier}: {st['requests']} req "
+                  f"{st['tokens_per_s']:.0f} tok/s "
+                  f"p50={st['p50_s']*1e3:.0f}ms p99={st['p99_s']*1e3:.0f}ms")
 
+    fb = session.feedback()
+    print(f"feedback: bw_mult={np.round(np.asarray(fb['bw_mult']), 3).tolist()}"
+          f" (apply_feedback folds this into the next round's observation)")
     for tier, pool in session.pools.items():
-        s = pool.stats
-        tps = s.tokens / max(s.busy_s, 1e-9)
-        print(f"pool[{pool.name}]: requests={s.requests} tokens={s.tokens} "
-              f"busy={s.busy_s:.2f}s throughput={tps:.0f} tok/s")
+        s = pool.stats.summary()
+        print(f"pool[{pool.name}]: requests={s['requests']} "
+              f"tokens={s['tokens']} busy={s['busy_s']:.2f}s "
+              f"throughput={s['tokens_per_s']:.0f} tok/s "
+              f"p50={s['p50_s']*1e3:.0f}ms p99={s['p99_s']*1e3:.0f}ms")
 
 
 if __name__ == "__main__":

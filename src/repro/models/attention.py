@@ -197,7 +197,9 @@ def decode_attention(q, k_cache, v_cache, *, length, window: Optional[int] = Non
 
     q: (B, 1, H, D); k_cache/v_cache: (B, S, KV, D); length: scalar int —
     number of valid cache entries (the cache may be a rolling window buffer,
-    in which case every slot < min(length, S) is valid).
+    in which case every slot < min(length, S) is valid) — or (B,) int for
+    per-row progress (continuous-batching cache slabs, where co-batched
+    requests joined at different times).
     """
     b, _, h, d = q.shape
     _, s, kvh, _ = k_cache.shape
@@ -205,8 +207,9 @@ def decode_attention(q, k_cache, v_cache, *, length, window: Optional[int] = Non
     scale = d ** -0.5
     qg = q.reshape(b, kvh, g, d)
     scores = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache).astype(jnp.float32) * scale
-    valid = jnp.arange(s) < jnp.minimum(length, s)
-    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    lengths = jnp.broadcast_to(jnp.atleast_1d(length), (b,))
+    valid = jnp.arange(s)[None, :] < jnp.minimum(lengths, s)[:, None]
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
     w = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgs,bskd->bkgd", w.astype(v_cache.dtype), v_cache)
     return out.reshape(b, 1, h, d)
@@ -259,12 +262,19 @@ def attn_forward(
     new_cache = None
     if ctx.mode == "decode":
         assert cache is not None
-        idx = cache["length"]  # scalar int32: tokens already in cache
+        idx = cache["length"]  # scalar int32 (or (B,): per-row slab progress)
         cache_len = cache["k"].shape[1]
         # rolling-window write position (== idx for full caches)
         wpos = jnp.mod(idx, cache_len)
-        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, wpos, axis=1)
-        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, wpos, axis=1)
+        if jnp.ndim(idx) == 0:
+            k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, wpos, axis=1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, wpos, axis=1)
+        else:
+            # per-row write position: each batch row owns its own progress
+            # through the cache slab (continuous-batching decode)
+            hit = jnp.arange(cache_len)[None, :] == wpos[:, None]  # (B, C)
+            k_cache = jnp.where(hit[:, :, None, None], k, cache["k"])
+            v_cache = jnp.where(hit[:, :, None, None], v, cache["v"])
         k_cache = ctx.constrain(k_cache, "cache_batch", "cache_seq", "cache_kv", "cache_dim")
         v_cache = ctx.constrain(v_cache, "cache_batch", "cache_seq", "cache_kv", "cache_dim")
         out = decode_attention(q, k_cache, v_cache, length=idx + 1, window=cfg.attn_window)

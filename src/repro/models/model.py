@@ -131,7 +131,8 @@ def forward(
     if "positions" in inputs:
         positions = inputs["positions"]
     elif ctx.mode == "decode":
-        pos = length[None] if length.ndim == 0 else length
+        # scalar length = whole-batch progress; (B,) = per-row slab progress
+        pos = length[None, None] if length.ndim == 0 else length[:, None]
         positions = jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32)
         if cfg.mrope:
             positions = jnp.broadcast_to(positions[:, None, :], (b, 3, 1))

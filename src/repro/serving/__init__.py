@@ -6,5 +6,12 @@ from repro.serving.policy import (  # noqa: F401
     Policy,
     make_policy,
 )
+from repro.serving.dispatch import (  # noqa: F401
+    Completion,
+    DispatchExecutor,
+    PoolExecutor,
+    Request,
+    serve_serial_oracle,
+)
 from repro.serving.session import FinetuneConfig, ServeSession  # noqa: F401
 from repro.serving.scan import run_scan, serve_scan  # noqa: F401

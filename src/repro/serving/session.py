@@ -595,6 +595,7 @@ class ServeSession:
         self.mesh = mesh
         self.mesh_axis = mesh_axis
         self.pools = pools
+        self._executor = None
         self.finetune = finetune
         self.hedge = hedge
         self.admission = admission
@@ -866,22 +867,106 @@ class ServeSession:
                 for k in parts[0]}
 
     # -- live model pools ---------------------------------------------------
-    def dispatch(self, sol, decode_tokens: int = 8):
-        """Execute a routed solution on the attached tier pools: each tier's
-        segment batch becomes one token workload sized by the chosen
-        fidelity.  Returns {tier: n_segments} actually dispatched."""
+    def _make_executor(self):
+        from repro.serving.dispatch import DispatchExecutor
+
+        # slab sized for the largest fidelity the router can choose:
+        # dispatch sizes prompts as 16·(1+r) with r < n_res
+        return DispatchExecutor(
+            self.pools, max_prefill_len=16 * self.sys_cfg.n_res)
+
+    @property
+    def executor(self):
+        """The lazily built continuous-batching dispatch executor
+        (:mod:`repro.serving.dispatch`) over the attached pools."""
+        if self.pools is None:
+            raise ValueError("session has no pools attached")
+        if self._executor is None:
+            self._executor = self._make_executor()
+        return self._executor
+
+    def dispatch(self, sol, decode_tokens: int = 8, serial: bool = False):
+        """Execute a routed solution on the attached tier pools.
+
+        Default: every routed segment becomes a :class:`Request` sized by
+        ITS OWN chosen fidelity (``16·(1+r_i)`` prompt tokens) and the
+        continuous-batching executor serves them — bucketed prefills,
+        token-level decode across all in-flight segments per tier, tiers
+        interleaved.  Dead lanes (``route == -1``, churned slots) are never
+        enqueued.  Returns {tier: stats dict} with per-request latency
+        p50/p99 and tokens/s (see ``DispatchExecutor.serve``).
+
+        ``serial=True`` is the deprecated pre-executor path, kept as the
+        scheduling oracle: one eager prefill+decode per tier, every
+        segment sized by the tier-MEAN fidelity (the historical behavior —
+        wrong for mixed-fidelity tiers, which is why it is no longer the
+        default).  Returns the old bare {tier: n_segments} counts.
+        """
         if self.pools is None:
             raise ValueError("session has no pools attached")
         import numpy as np
 
-        served = {}
-        for tier in (0, 1):
-            idx = np.where(np.asarray(sol["route"]) == tier)[0]
-            if len(idx) == 0:
+        if serial:
+            served = {}
+            for tier in (0, 1):
+                idx = np.where(np.asarray(sol["route"]) == tier)[0]
+                if len(idx) == 0:
+                    continue
+                # token budget scales with chosen fidelity (resolution x fps)
+                n_tok = 16 * (1 + int(np.asarray(sol["r"])[idx].mean()))
+                toks = jnp.ones((len(idx), n_tok), jnp.int32)
+                self.pools[tier].serve_segment(toks,
+                                               decode_tokens=decode_tokens)
+                served[tier] = len(idx)
+            return served
+
+        from repro.serving.dispatch import Request
+
+        route = np.asarray(sol["route"])
+        r = np.asarray(sol["r"])
+        reqs = []
+        for i in range(route.shape[0]):
+            tier = int(route[i])
+            if tier < 0:        # churned / dead lane — never enqueued
                 continue
-            # token budget scales with chosen fidelity (resolution x fps)
-            n_tok = 16 * (1 + int(np.asarray(sol["r"])[idx].mean()))
-            toks = jnp.ones((len(idx), n_tok), jnp.int32)
-            self.pools[tier].serve_segment(toks, decode_tokens=decode_tokens)
-            served[tier] = len(idx)
-        return served
+            n_tok = 16 * (1 + int(r[i]))     # per-segment fidelity sizing
+            vocab = self.pools[tier].cfg.vocab_size
+            toks = (i * 131 + np.arange(n_tok)) % vocab
+            reqs.append(Request(stream=i, tier=tier,
+                                tokens=toks.astype(np.int32),
+                                decode_tokens=decode_tokens))
+        return self.executor.serve(reqs)
+
+    def feedback(self):
+        """The executor's measured per-tier serving state (see
+        ``DispatchExecutor.feedback``)."""
+        return self.executor.feedback()
+
+    def apply_feedback(self, obs: Observation) -> Observation:
+        """Fold the executor's measured per-tier state into an observation —
+        the router ↔ serving loop the paper's Stage-2 assumes.
+
+        The measured multiplier lands twice: on ``bw_mult`` (the realization
+        sees the congested uplink) and, capacity-weighted across tiers, on
+        ``bw_scale`` (the C6 repair plans against the shrunken budget — this
+        is what actually changes the next round's decisions).  A session
+        whose pools kept up returns the observation unchanged.
+        """
+        fb = self.feedback()
+        mult = jnp.asarray(fb["bw_mult"], jnp.float32)[:2]
+        sys = self.sys_cfg
+        cap = sys.edge_bw_mbps + sys.cloud_bw_mbps
+        scale = (sys.edge_bw_mbps * mult[0] + sys.cloud_bw_mbps * mult[1]) / cap
+        if obs.z is not None and jnp.ndim(obs.z) >= 2:
+            # round-stacked stream: every leaf needs the leading round axis
+            # for the serve scan, so the (constant) measured state is tiled
+            r = obs.z.shape[0]
+            mult_seq = jnp.broadcast_to(mult, (r, 2))
+            scale_seq = jnp.broadcast_to(scale, (r,))
+        else:
+            mult_seq, scale_seq = mult, scale
+        return dataclasses.replace(
+            obs,
+            bw_mult=mult_seq if obs.bw_mult is None else obs.bw_mult * mult,
+            bw_scale=scale_seq if obs.bw_scale is None else obs.bw_scale * scale,
+        )
